@@ -1,0 +1,80 @@
+"""Shared state for the paper-table benchmarks: one synthetic dataset and one
+set of trained models (teacher, baseline student, optimised student) reused
+by every table/figure script. Scale with REPRO_BENCH_FAST=1 (CI) or
+REPRO_BENCH_SCALE=<n_per_class>.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import distill
+from repro.data import synthetic
+from repro.models import cnn
+from repro.train import cnn_trainer as T
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+N_PER_CLASS = int(os.environ.get("REPRO_BENCH_SCALE", "120" if FAST else "400"))
+EPOCHS = 2 if FAST else 4
+
+
+@functools.lru_cache(maxsize=1)
+def data():
+    tr = synthetic.load("train", n_per_class=N_PER_CLASS, seed=0)
+    te = synthetic.load("test", n_per_class=max(N_PER_CLASS // 4, 50), seed=0)
+    gray_tr = synthetic.normalize(synthetic.to_grayscale(tr.images))
+    gray_te = synthetic.normalize(synthetic.to_grayscale(te.images))
+    return {
+        "color_tr": (synthetic.normalize(tr.images), tr.labels),
+        "color_te": (synthetic.normalize(te.images), te.labels),
+        "gray_tr": (gray_tr, tr.labels),
+        "gray_te": (gray_te, te.labels),
+    }
+
+
+TEACHER_CFG = cnn.TeacherConfig(width=16, blocks_per_stage=2)
+TEACHER_CFG_COLOR = TEACHER_CFG
+TEACHER_CFG_GRAY = cnn.TeacherConfig(in_channels=1, width=16, blocks_per_stage=2)
+
+
+@functools.lru_cache(maxsize=1)
+def models():
+    """Train the benchmark model set once. Returns a dict of params."""
+    d = data()
+    t0 = time.time()
+    out = {}
+    xc, yc = d["color_tr"]
+    # the ResNet teacher is data-hungrier than the tiny student: 2x epochs
+    out["teacher_color"] = T.train_teacher(xc, yc, TEACHER_CFG_COLOR,
+                                           epochs=2 * EPOCHS, batch_size=128)
+    xg, yg = d["gray_tr"]
+    out["teacher_gray"] = T.train_teacher(xg, yg, TEACHER_CFG_GRAY,
+                                          epochs=2 * EPOCHS, batch_size=128)
+    # teacher logits over the grey train set (for KD)
+    tl = jax.jit(lambda p, x: cnn.teacher_logits(p, x, TEACHER_CFG_GRAY)[0])
+    zt = np.concatenate([np.asarray(tl(out["teacher_gray"], xg[i:i + 512]))
+                         for i in range(0, len(yg), 512)])
+    out["teacher_gray_logits"] = zt
+
+    base_cfg = T.TrainConfig(epochs=EPOCHS, batch_size=128, seed=0)
+    out["student_base"], _ = T.train_student(xg, yg, cfg=base_cfg)
+    opt_cfg = T.TrainConfig(epochs=EPOCHS, batch_size=128, seed=0,
+                            prune_epochs=2, finetune_epochs=1, qat=True)
+    out["student_opt"], out["student_opt_masks"] = T.train_student(
+        xg, yg, teacher_logits_all=zt, cfg=opt_cfg, do_prune=True)
+    out["train_time_s"] = time.time() - t0
+    return out
+
+
+def student_feature_fn(params, x):
+    return cnn.student_features(params, x)[0]
+
+
+def collect_features(params, x, batch=512):
+    fn = jax.jit(student_feature_fn)
+    return np.concatenate([np.asarray(fn(params, x[i:i + batch]))
+                           for i in range(0, len(x), batch)])

@@ -1,0 +1,41 @@
+"""Paper Fig. 1: mean vs median per-feature binarisation thresholds, and the
+downstream classification accuracy of each (the paper's §II-D-1 argument:
+sparse ReLU feature maps make the mean threshold more discriminative)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import hybrid, quant
+
+
+def run() -> dict:
+    d = common.data()
+    m = common.models()
+    gtr, ytr = d["gray_tr"]
+    gte, yte = d["gray_te"]
+    params = m["student_opt"]
+
+    feats = jnp.asarray(common.collect_features(params, gtr))
+    mean_thr = quant.feature_thresholds(feats, "mean")
+    med_thr = quant.feature_thresholds(feats, "median")
+
+    out = {
+        "mean_thr_avg": float(jnp.mean(mean_thr)),
+        "median_thr_avg": float(jnp.mean(med_thr)),
+        "frac_features_mean_below_median": float(jnp.mean(mean_thr < med_thr)),
+        "feature_sparsity": float(jnp.mean(feats == 0.0)),
+    }
+    for method in ("mean", "median"):
+        head = hybrid.fit_acam_head(common.student_feature_fn, params,
+                                    gtr, ytr, 10, threshold_method=method)
+        clf = hybrid.HybridClassifier(params,
+                                      jax.jit(common.student_feature_fn), head)
+        out[f"accuracy_{method}"] = clf.accuracy(gte, yte)
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python
+emulation — not a performance number), so the wall-times reported here are
+for the *compiled jnp reference paths* at deployment shapes; they give the
+CSV a concrete us_per_call column and catch performance regressions of the
+XLA fallbacks. TPU timings come from the roofline analysis instead
+(EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run() -> list[dict]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # acam matching at the paper's deployment shape (B=1 is the edge case;
+    # B=256 the calibration batch)
+    from repro.kernels.acam_match.ref import acam_match_ref
+    for b in (1, 256):
+        f = jax.random.normal(key, (b, 784))
+        thr = jnp.zeros((784,))
+        t = (jax.random.uniform(key, (10, 784)) > 0.5).astype(jnp.float32)
+        us = _time(jax.jit(acam_match_ref), f, thr, t)
+        rows.append({"name": f"acam_match_ref_b{b}", "us_per_call": us,
+                     "derived": f"{b*10*784/us:.0f} cell-matches/us"})
+
+    from repro.kernels.acam_similarity.ref import acam_similarity_ref
+    q = jax.random.uniform(key, (256, 784))
+    lo = jnp.zeros((10, 784)); hi = jnp.ones((10, 784))
+    us = _time(jax.jit(acam_similarity_ref), q, lo, hi)
+    rows.append({"name": "acam_similarity_ref_b256", "us_per_call": us,
+                 "derived": f"{256*10*784/us:.0f} cell-ops/us"})
+
+    from repro.kernels.kd_loss.ref import kd_loss_ref
+    zs = jax.random.normal(key, (64, 32000))
+    zt = jax.random.normal(key, (64, 32000))
+    y = jnp.zeros((64,), jnp.int32)
+    us = _time(jax.jit(lambda a, b, c: jnp.mean(kd_loss_ref(a, b, c))), zs, zt, y)
+    rows.append({"name": "kd_loss_ref_64x32k", "us_per_call": us,
+                 "derived": f"{64*32000*4/us/1e3:.1f} MB/ms logits"})
+
+    from repro.models.layers import chunked_attention
+    qq = jax.random.normal(key, (1, 1024, 8, 64), jnp.bfloat16)
+    kk = jax.random.normal(key, (1, 1024, 2, 64), jnp.bfloat16)
+    vv = jax.random.normal(key, (1, 1024, 2, 64), jnp.bfloat16)
+    us = _time(jax.jit(lambda a, b, c: chunked_attention(a, b, c, causal=True)),
+               qq, kk, vv)
+    flops = 2 * 2 * 1024 * 1024 * 8 * 64
+    rows.append({"name": "chunked_attention_1k", "us_per_call": us,
+                 "derived": f"{flops/us/1e3:.1f} MFLOP/ms"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,57 @@
+"""Paper Table I: teacher vs student compression pipeline.
+
+Columns: accuracy / F1 / precision / recall / parameters / MAC operations /
+compression ratio — for teacher (colour + greyscale), unoptimised student,
+and the optimised (KD + prune + QAT) student. Parameter and MAC counts are
+analytic (Eq. 13) and therefore match the paper's methodology exactly;
+accuracies are on the synthetic dataset (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+from benchmarks import common
+from repro.models import cnn
+from repro.train import cnn_trainer as T
+
+
+def run() -> list[dict]:
+    d = common.data()
+    m = common.models()
+    rows = []
+
+    teacher_macs_c = cnn.teacher_macs(common.TEACHER_CFG_COLOR)
+    teacher_params_c = cnn.count_params(m["teacher_color"])
+    tl_c = functools.partial(
+        lambda p, x, cfg: cnn.teacher_logits(p, x, cfg), cfg=common.TEACHER_CFG_COLOR)
+    met = T.metrics(tl_c, m["teacher_color"], *d["color_te"])
+    rows.append(dict(model="teacher_colour", **met, params=teacher_params_c,
+                     macs=teacher_macs_c, compression="1:1"))
+
+    teacher_macs_g = cnn.teacher_macs(common.TEACHER_CFG_GRAY)
+    tl_g = functools.partial(
+        lambda p, x, cfg: cnn.teacher_logits(p, x, cfg), cfg=common.TEACHER_CFG_GRAY)
+    met = T.metrics(tl_g, m["teacher_gray"], *d["gray_te"])
+    rows.append(dict(model="teacher_greyscale", **met,
+                     params=cnn.count_params(m["teacher_gray"]),
+                     macs=teacher_macs_g,
+                     compression=f"{teacher_macs_c/teacher_macs_g:.2f}:1"))
+
+    s_macs = cnn.student_macs()["total"]
+    s_params = cnn.count_params(m["student_base"])
+    sl = functools.partial(cnn.student_logits, train=False)
+    met = T.metrics(sl, m["student_base"], *d["gray_te"])
+    rows.append(dict(model="student_base", **met, params=s_params, macs=s_macs,
+                     compression=f"{teacher_macs_c/s_macs:.0f}:1"))
+
+    met = T.metrics(sl, m["student_opt"], *d["gray_te"])
+    eff_macs = int(s_macs * 0.2)  # 80% sparsity skips pruned-weight MACs
+    rows.append(dict(model="student_optimised", **met, params=s_params,
+                     macs=eff_macs,
+                     compression=f"{teacher_macs_c/eff_macs:.0f}:1"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,38 @@
+"""Paper Table II: classification accuracy vs templates-per-class (1/2/3),
+binary feature-count matching, plus the silhouette-score selection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import hybrid, templates
+
+
+def run() -> list[dict]:
+    d = common.data()
+    m = common.models()
+    gtr, ytr = d["gray_tr"]
+    gte, yte = d["gray_te"]
+    params = m["student_opt"]
+
+    rows = []
+    for k in (1, 2, 3):
+        head = hybrid.fit_acam_head(common.student_feature_fn, params,
+                                    gtr, ytr, 10, k=k)
+        clf = hybrid.HybridClassifier(params,
+                                      jax.jit(common.student_feature_fn), head)
+        rows.append({"templates_per_class": k,
+                     "accuracy": clf.accuracy(gte, yte)})
+
+    feats = common.collect_features(params, gtr[:1500])
+    best_k, scores = templates.select_k_by_silhouette(
+        jnp.asarray(feats), jnp.asarray(ytr[:1500]), 10)
+    rows.append({"silhouette_best_k": best_k,
+                 "silhouette_scores": {k: round(v, 4) for k, v in scores.items()}})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

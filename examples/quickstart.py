@@ -1,0 +1,59 @@
+"""Quickstart: the full hybrid edge classifier, end to end.
+
+Trains the paper's tinyML student CNN (Fig. 5) on the synthetic CIFAR-10
+substitute, distils templates, programs the ACAM back-end, and reports the
+accuracy/energy trade-off of §V. Runs on CPU in a few minutes.
+
+    PYTHONPATH=src python examples/quickstart.py [--fast]
+"""
+import argparse
+import functools
+
+import jax
+
+from repro.core import energy, hybrid
+from repro.data import synthetic
+from repro.models import cnn
+from repro.train import cnn_trainer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--n-per-class", type=int, default=None)
+    args = ap.parse_args()
+    n = args.n_per_class or (120 if args.fast else 400)
+    epochs = 2 if args.fast else 4
+
+    print("== data: synthetic CIFAR-10 (greyscale, normalised; paper §IV-A)")
+    tr = synthetic.load("train", n_per_class=n, seed=0)
+    te = synthetic.load("test", n_per_class=max(n // 4, 50), seed=0)
+    gtr = synthetic.normalize(synthetic.to_grayscale(tr.images))
+    gte = synthetic.normalize(synthetic.to_grayscale(te.images))
+
+    print("== front-end: student CNN (conv 32-128-256-16 -> 784 features)")
+    cfg = T.TrainConfig(epochs=epochs, batch_size=128)
+    params, _ = T.train_student(gtr, tr.labels, cfg=cfg)
+    logits_fn = functools.partial(cnn.student_logits, train=False)
+    acc_soft = T.evaluate(logits_fn, params, gte, te.labels)
+    print(f"   softmax-head accuracy: {acc_soft:.4f}")
+
+    print("== back-end: binary templates -> TXL-ACAM pattern matching")
+    feature_fn = lambda p, x: cnn.student_features(p, x)[0]
+    head = hybrid.fit_acam_head(feature_fn, params, gtr, tr.labels, 10, k=1)
+    clf = hybrid.HybridClassifier(params, jax.jit(feature_fn), head)
+    acc_acam = clf.accuracy(gte, te.labels)
+    print(f"   ACAM feature-count accuracy: {acc_acam:.4f} "
+          f"(drop {acc_soft - acc_acam:+.4f} vs softmax — paper saw -11%)")
+
+    print("== energy (paper §V-D arithmetic)")
+    nums = energy.paper_numbers()
+    print(f"   back-end  : {nums['backend_nj']:.2f} nJ / inference (Eq. 14)")
+    print(f"   front-end : {nums['frontend_nj']:.2f} nJ / inference")
+    print(f"   teacher   : {nums['teacher_uj']:.2f} uJ / inference")
+    print(f"   reduction : {nums['reduction_x']:.0f}x")
+    print(f"   this head : {head.energy_per_inference()*1e9:.2f} nJ")
+
+
+if __name__ == "__main__":
+    main()

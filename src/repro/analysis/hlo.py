@@ -1,0 +1,183 @@
+"""Optimised-HLO inspection: collective traffic + op census.
+
+`collective_bytes(hlo_text)` sums the output-operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(including their async -start forms), grouped by op kind — the collective
+roofline term's numerator. Bytes are *per-device* shard bytes, matching the
+per-chip link-bandwidth denominator.
+
+Caveat handled by the caller (dryrun.py): ops inside while-loop bodies appear
+once in the text but execute trip-count times; the dry-run therefore derives
+per-layer costs from loop-free layer probes and scales by n_layers.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# `%name = TYPE op-name(` — TYPE may be a tuple `(bf16[..], ..)`
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce-start|all-gather-start|reduce-scatter|all-to-all|"
+    r"collective-permute-start|all-reduce|all-gather|collective-permute)\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-kind output bytes of collective ops in the (post-SPMD) HLO.
+
+    XLA:CPU promotes bf16 reductions to f32 (`to_apply=%..._promoted`); the
+    TPU target reduces bf16 natively, so promoted ops are counted at half
+    their f32 size (the wire dtype the TPU would use).
+    """
+    out: dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        kind = op.replace("-start", "")
+        b = _shape_bytes(type_str)
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.end(): line_end if line_end > 0 else m.end() + 400]
+        if "_promoted" in line and "f32" in type_str:
+            b //= 2
+        out[kind] += b
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(collective_bytes(hlo_text).values())
+
+
+def op_census(hlo_text: str, ops=("fusion", "dot", "convolution", "custom-call",
+                                  "while", "sort", "scatter", "gather")) -> dict[str, int]:
+    """Rough op-count census for HLO inspection in §Perf iterations."""
+    counts = {}
+    for op in ops:
+        counts[op] = len(re.findall(rf"=\s*[^=]*\b{op}\(", hlo_text))
+    return counts
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (\w+)\[([0-9,]*)\]")
+
+#: ops that are pure layout / precision conversion: the TPU backend fuses
+#: these into neighbouring compute (zero extra HBM traffic); XLA:CPU
+#: materialises them (observed: 13 standalone f32 copies of the (B,S,d)
+#: activation stream per layer). Fusions whose name is composed solely of
+#: these tokens are treated the same.
+_LAYOUT_TOKENS = {"convert", "copy", "bitcast", "transpose", "reshape",
+                  "broadcast", "slice", "pad", "wrapped", "fusion", "in",
+                  "dim", "select"}
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+) = (\w+)\[([0-9,]*)\]\S*\s+(\w[\w-]*)\(")
+
+
+def bytes_with_chunk_pair(hlo_text: str, chunk: int) -> int:
+    """Sum output bytes of materialised ops carrying an (chunk x chunk) SSD
+    decay/score matrix in their trailing dims (e.g. [..., 256, 256] or the
+    backward's [..., 256, 256, 80]) — the Mamba2 SSD analogue of attention
+    scores, streamed through VMEM by fused SSD kernels (Triton/Pallas
+    reference implementations); same treatment as flash-attention scores."""
+    total = 0
+    cur_fused = False
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        if ls.startswith("%") or ls.startswith("ENTRY"):
+            cur_fused = "fused" in ls.split()[0]
+            continue
+        if cur_fused:
+            continue
+        m = _DEF_RE.match(line)
+        if not m or m.group(1) not in _DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in m.group(2).split(",")] if m.group(2) else []
+        tail = dims[-3:]
+        if len(dims) >= 2 and sum(1 for d in tail if d == chunk) >= 2:
+            n = 1
+            for d in dims:
+                n *= d
+            total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def bytes_of_layout_ops(hlo_text: str) -> int:
+    """Sum output bytes of materialised pure-layout/conversion ops (see
+    _LAYOUT_TOKENS) outside fusion bodies — the TPU-fusion adjustment of the
+    roofline memory term (EXPERIMENTS.md §Roofline, measurement notes)."""
+    total = 0
+    cur_fused = False
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        if ls.startswith("%") or ls.startswith("ENTRY"):
+            cur_fused = "fused" in ls.split()[0]
+            continue
+        if cur_fused:
+            continue
+        m = _NAME_RE.match(line)
+        if not m or m.group(2) not in _DTYPE_BYTES:
+            continue
+        name, opcode = m.group(1), m.group(4)
+        is_layout = opcode in ("convert", "copy", "bitcast", "transpose",
+                               "reshape", "broadcast", "slice", "pad")
+        if not is_layout and opcode == "fusion":
+            tokens = set(re.split(r"[._\d]+", name)) - {""}
+            is_layout = tokens <= _LAYOUT_TOKENS
+        if is_layout:
+            dims = [int(x) for x in m.group(3).split(",")] if m.group(3) else []
+            n = 1
+            for d in dims:
+                n *= d
+            total += n * _DTYPE_BYTES[m.group(2)]
+    return total
+
+
+def bytes_with_trailing_dims(hlo_text: str, d1: int, d2: int) -> int:
+    """Sum output bytes of materialised ops whose shape ends with [.., d1, d2]
+    (ops inside fusion bodies are skipped — they never touch HBM).
+
+    Used to quantify (S, S) attention-score materialisation in the loop-free
+    dry-run probes: the deployed path (Pallas flash kernel / chunked XLA
+    attention) streams those scores through VMEM, so the roofline memory
+    term subtracts this traffic (see dryrun.py)."""
+    total = 0
+    cur_fused = False
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        if ls.startswith("%") or ls.startswith("ENTRY"):
+            cur_fused = "fused" in ls.split()[0]
+            continue
+        if cur_fused:
+            continue
+        m = _DEF_RE.match(line)
+        if not m or m.group(1) not in _DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in m.group(2).split(",")] if m.group(2) else []
+        if len(dims) >= 2 and dims[-2] == d1 and dims[-1] == d2:
+            n = 1
+            for d in dims:
+                n *= d
+            total += n * _DTYPE_BYTES[m.group(1)]
+    return total

@@ -1,0 +1,90 @@
+"""Roofline model for the TPU v5e target (see EXPERIMENTS.md §Roofline).
+
+All inputs are PER-DEVICE quantities — XLA cost_analysis on an
+SPMD-partitioned module reports the per-device program (verified
+empirically: an 8-way sharded matmul reports 1/8 of total FLOPs), and
+collective bytes are parsed from the per-device HLO.
+
+    compute term    = flops_dev / 197e12 FLOP/s      [bf16 MXU]
+    memory term     = bytes_dev / 819e9  B/s         [HBM]
+    collective term = coll_dev  / 50e9   B/s         [ICI link]
+
+Totals for MFU-style reporting multiply by `chips`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+
+class Roofline(NamedTuple):
+    flops_dev: float  # per-device HLO flops
+    bytes_dev: float  # per-device HLO bytes accessed
+    coll_dev: float  # per-device collective bytes
+    chips: int
+    model_flops: float  # 6*N*D (train) / 2*N*D (decode/prefill), global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Step-time lower bound if all three engines fully overlap."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / total HLO_FLOPs — remat/dispatch waste diagnostic."""
+        total = self.flops_dev * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """MFU ceiling at the roofline: MODEL_FLOPS/(t_bound x chips x peak)."""
+        denom = self.t_bound * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """How close the compute term is to the binding constraint — the
+        perf 'score': 1.0 means compute-bound at the roofline."""
+        return self.t_compute / self.t_bound if self.t_bound else 0.0
+
+    def row(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "t_bound_s": self.t_bound,
+            "model_flops": self.model_flops,
+            "hlo_flops_dev": self.flops_dev,
+            "hlo_bytes_dev": self.bytes_dev,
+            "coll_bytes_dev": self.coll_dev,
+            "useful_frac": self.useful_flops_frac,
+            "mfu_bound": self.mfu_bound,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def model_flops(param_count: int, tokens: int, kind: str) -> float:
+    """6*N*D for training, 2*N*D forward-only (prefill/decode)."""
+    return (6.0 if kind == "train" else 2.0) * param_count * tokens

@@ -1,0 +1,15 @@
+"""The paper's primary contribution: hybrid CNN + RRAM-CMOS ACAM classifier.
+
+Modules:
+  distill   — knowledge distillation + curriculum (Eq. 1-4)
+  prune     — polynomial-decay magnitude pruning (Eq. 5-7)
+  quant     — 8-bit QAT + binary mean-threshold feature quantisation
+  templates — template generation, k-means, silhouette (§II-D-1)
+  matching  — feature-count / similarity matching + WTA (Eq. 8-12)
+  acam      — TXL-ACAM 6T4R / 3T1R behavioural device models (§III)
+  energy    — Horowitz + Eq. 14 energy model (§V-D)
+  hybrid    — the deployable hybrid classifier + ACAMHead
+"""
+from repro.core import acam, distill, energy, hybrid, matching, prune, quant, templates
+
+__all__ = ["acam", "distill", "energy", "hybrid", "matching", "prune", "quant", "templates"]

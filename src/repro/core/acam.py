@@ -1,0 +1,217 @@
+"""RRAM-CMOS TXL-ACAM device/behaviour models (paper §III).
+
+The paper employs the Template piXeL (TXL) ACAM in two cell flavours:
+
+  - 6T4R charging cell (Fig. 4a): per-cell matching window set by the ratio of
+    the upper/lower RRAM devices shifting hybrid-inverter thresholds; on a
+    match the cell conditionally charges the row matchline through a
+    current-limiter pMOS; a capacitor integrates the per-row charge and a
+    sense amplifier thresholds the time-to-charge. Good for sparse
+    activations (charge only on match).
+
+  - 3T1R precharging cell (Fig. 4b): a 1T1R voltage divider drives a
+    complementary nMOS/pMOS pair discharging dual matchlines ML_LOW / ML_HIGH
+    when the input is below/above the window; evaluating both matchlines
+    separately makes the cell *differentiable* (you know which bound failed).
+
+This module gives a behavioural simulator faithful to those dynamics at the
+level the software flow needs (the paper's program-once-read-many flow:
+calibrate weights in software, program once):
+
+  * window programming with RRAM variability (log-normal conductance noise),
+  * matchline charge accumulation with per-cell current limits (6T4R) or
+    dual-rail discharge counts (3T1R),
+  * sense-amplifier thresholding with a calibratable reference,
+  * a smooth (sigmoid-windowed) surrogate for gradient-based template
+    calibration (3T1R differentiability).
+
+Everything is jax.jit / vmap friendly and differentiable where stated.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class ACAMConfig(NamedTuple):
+    cell: str = "6T4R"  # or "3T1R"
+    vdd: float = 1.8  # 180 nm CMOS supply
+    # matchline dynamics
+    c_ml: float = 20e-15  # matchline capacitance [F]
+    i_cell: float = 2e-6  # per-cell current-limited charge current [A]
+    t_eval: float = 10e-9  # evaluation window [s]
+    sense_frac: float = 0.5  # sense-amp threshold as fraction of VDD
+    # RRAM programming
+    sigma_program: float = 0.0  # log-normal sigma on window edges
+    #: calibrate I_cell so a full-row match charges exactly to VDD within
+    #: t_eval (§III-B: "sense amplifiers are calibrated to detect a specific
+    #: voltage level ... time-to-charge dynamics of the matchline") — without
+    #: this the line saturates after a few matches and ranking collapses.
+    auto_calibrate: bool = True
+    # energy
+    e_cell: float = 185e-15  # J per similarity-search op per cell (paper §III-B)
+    # differentiable surrogate sharpness
+    beta: float = 25.0
+
+
+class ProgrammedACAM(NamedTuple):
+    """ACAM array with windows programmed into (noisy) RRAM conductances.
+
+    lower/upper: (rows, cells) programmed window bounds (voltage-domain units;
+    the software flow maps binary/real features onto [0, 1]).
+    """
+
+    lower: Array
+    upper: Array
+    valid: Array  # (rows,) template validity
+    config: ACAMConfig
+
+
+def program(
+    lower: Array, upper: Array, valid: Array, config: ACAMConfig, key: Array | None = None
+) -> ProgrammedACAM:
+    """Program windows; apply RRAM variability if sigma_program > 0.
+
+    Models the write-time log-normal spread of RRAM conductance which shifts
+    the hybrid-inverter thresholds, i.e. the realised window edges.
+    """
+    lo, hi = lower, upper
+    if config.sigma_program > 0.0 and key is not None:
+        k1, k2 = jax.random.split(key)
+        lo = lo * jnp.exp(config.sigma_program * jax.random.normal(k1, lo.shape))
+        hi = hi * jnp.exp(config.sigma_program * jax.random.normal(k2, hi.shape))
+        hi = jnp.maximum(hi, lo)  # windows cannot invert
+    if config.auto_calibrate:
+        n_cells = lower.shape[-1]
+        i_cal = config.c_ml * config.vdd / (config.t_eval * n_cells)
+        config = config._replace(i_cell=i_cal)
+    return ProgrammedACAM(lo, hi, valid, config)
+
+
+def cell_match(acam: ProgrammedACAM, queries: Array) -> Array:
+    """Hard per-cell match: (B, rows, cells) in {0,1}.
+
+    6T4R: match <=> input inside window (cell charges ML).
+    3T1R: match <=> neither ML_LOW nor ML_HIGH discharges — same predicate,
+    different polarity; the distinction matters for dynamics & energy below.
+    """
+    q = queries[:, None, :]
+    return ((q >= acam.lower[None]) & (q <= acam.upper[None])).astype(jnp.float32)
+
+
+def matchline_voltage(acam: ProgrammedACAM, queries: Array) -> Array:
+    """6T4R matchline voltage after t_eval: (B, rows).
+
+    n matching cells charge C_ml in parallel through current limiters:
+        V(t) = min(VDD, n * I_cell * t_eval / C_ml)
+    (linear ramp under the current limit — the regime the sense amps are
+    calibrated for, §III-B).
+    """
+    cfg = acam.config
+    n_match = jnp.sum(cell_match(acam, queries), axis=-1)
+    v = n_match * cfg.i_cell * cfg.t_eval / cfg.c_ml
+    return jnp.minimum(v, cfg.vdd)
+
+
+def dual_rail_mismatch(acam: ProgrammedACAM, queries: Array) -> tuple[Array, Array]:
+    """3T1R: per-row counts of low-side and high-side mismatches (B, rows)."""
+    q = queries[:, None, :]
+    low = jnp.sum((q < acam.lower[None]).astype(jnp.float32), axis=-1)
+    high = jnp.sum((q > acam.upper[None]).astype(jnp.float32), axis=-1)
+    return low, high
+
+
+def sense(acam: ProgrammedACAM, queries: Array) -> Array:
+    """Sense-amplifier output per template row: analogue similarity (B, rows).
+
+    6T4R: normalised matchline voltage (fraction of VDD at readout).
+    3T1R: fraction of cells whose dual rails both stayed high.
+    Invalid rows are driven to -inf so the WTA never selects them.
+    """
+    cfg = acam.config
+    if cfg.cell == "6T4R":
+        s = matchline_voltage(acam, queries) / cfg.vdd
+    elif cfg.cell == "3T1R":
+        low, high = dual_rail_mismatch(acam, queries)
+        n = acam.lower.shape[-1]
+        s = 1.0 - (low + high) / n
+    else:
+        raise ValueError(f"unknown cell {cfg.cell}")
+    return jnp.where(acam.valid[None, :], s, -jnp.inf)
+
+
+def soft_sense(acam: ProgrammedACAM, queries: Array) -> Array:
+    """Differentiable surrogate of `sense` (3T1R differentiability, §III).
+
+    Each cell's match indicator is replaced by the product of two sigmoids
+    around the window edges; gradients flow to lower/upper — this is the
+    software-calibration path of the program-once flow.
+    """
+    cfg = acam.config
+    q = queries[:, None, :]
+    m = jax.nn.sigmoid(cfg.beta * (q - acam.lower[None])) * jax.nn.sigmoid(
+        cfg.beta * (acam.upper[None] - q)
+    )
+    s = jnp.mean(m, axis=-1)
+    return jnp.where(acam.valid[None, :], s, -1e9)
+
+
+def wta(similarities: Array) -> Array:
+    """Winner-take-all row index (B,) — the analogue argmax network."""
+    return jnp.argmax(similarities, axis=-1)
+
+
+def classify_rows_to_classes(row_winner: Array, rows_per_class: int) -> Array:
+    """Map winning template row -> class id (rows laid out class-major)."""
+    return row_winner // rows_per_class
+
+
+def search_energy(acam: ProgrammedACAM, batch: int = 1) -> Array:
+    """Energy per batch of similarity searches: rows x cells x E_cell x B.
+
+    Matches Eq. 14 (E = N_templates x N_features x 185 fJ) when all rows are
+    valid — we additionally exclude never-programmed rows, which a real
+    deployment would power-gate.
+    """
+    cfg = acam.config
+    cells = acam.lower.shape[-1]
+    rows = jnp.sum(acam.valid.astype(jnp.int32))
+    return rows * cells * cfg.e_cell * batch
+
+
+def calibrate_windows(
+    acam: ProgrammedACAM,
+    features: Array,
+    labels_rows: Array,
+    *,
+    steps: int = 100,
+    lr: float = 0.05,
+) -> ProgrammedACAM:
+    """Gradient calibration of windows against known row assignments.
+
+    Uses the 3T1R-style soft_sense surrogate and a cross-entropy on row
+    scores; final windows are what gets programmed once to hardware.
+    """
+
+    def loss_fn(bounds):
+        lo, hi = bounds
+        sim = soft_sense(acam._replace(lower=lo, upper=hi), features)
+        logp = jax.nn.log_softmax(sim * 10.0, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, labels_rows[:, None], axis=-1))
+
+    bounds = (acam.lower, acam.upper)
+    g = jax.jit(jax.grad(loss_fn))
+
+    def body(_, b):
+        lo, hi = b
+        glo, ghi = g((lo, hi))
+        lo = lo - lr * glo
+        hi = hi - lr * ghi
+        return lo, jnp.maximum(hi, lo)
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, bounds)
+    return acam._replace(lower=lo, upper=hi)

@@ -1,0 +1,114 @@
+"""The hybrid edge classifier (paper Fig. 2): CNN front-end + ACAM back-end.
+
+Glues together the whole paper pipeline as a deployable object:
+
+    teacher --KD+curriculum--> student --prune--> --QAT--> front-end
+    front-end features --mean-threshold--> binary templates --program--> ACAM
+    inference: features -> binarize -> ACAM match (feature-count/similarity)
+               -> WTA -> class
+
+Also exposes `ACAMHead`, the drop-in replacement for a model's final dense
+classification layer — usable by any model in the zoo whose output is a
+small-cardinality classification (see DESIGN.md §5/§7 for applicability).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import acam as acam_lib
+from repro.core import energy as energy_lib
+from repro.core import matching, quant, templates
+
+Array = jax.Array
+
+
+class ACAMHead(NamedTuple):
+    """Binary template-matching classification head.
+
+    Replaces `logits = features @ W + b; argmax(softmax(logits))` with
+    binarise -> parallel template match -> WTA. `bank` is what gets
+    programmed once into the TXL-ACAM array.
+    """
+
+    bank: templates.TemplateBank
+    method: str = "feature_count"
+    alpha: float = 1.0
+
+    def __call__(self, features: Array) -> tuple[Array, Array]:
+        """features: (B, N) raw front-end features -> (pred, per_class)."""
+        q = quant.binarize(features, self.bank.thresholds)
+        return matching.classify(q, self.bank, method=self.method, alpha=self.alpha)
+
+    def scores(self, features: Array) -> Array:
+        q = quant.binarize(features, self.bank.thresholds)
+        if self.method == "feature_count":
+            s = matching.feature_count_scores(q, self.bank.templates, self.bank.valid)
+        else:
+            s = matching.similarity_scores(
+                q, self.bank.lower, self.bank.upper, self.bank.valid, alpha=self.alpha
+            )
+        return jnp.max(s, axis=-1)  # (B, C)
+
+    def to_acam(
+        self, config: acam_lib.ACAMConfig | None = None, key: Array | None = None
+    ) -> acam_lib.ProgrammedACAM:
+        """Flatten the bank class-major into a programmed ACAM array."""
+        cfg = config or acam_lib.ACAMConfig()
+        c, k, n = self.bank.templates.shape
+        lo = self.bank.lower.reshape(c * k, n)
+        hi = self.bank.upper.reshape(c * k, n)
+        valid = self.bank.valid.reshape(c * k)
+        return acam_lib.program(lo, hi, valid, cfg, key)
+
+    def energy_per_inference(self) -> float:
+        rows = int(jnp.sum(self.bank.valid))
+        return energy_lib.backend_energy(rows, self.bank.num_features)
+
+
+def fit_acam_head(
+    feature_fn: Callable[[Any, Array], Array],
+    params: Any,
+    inputs: Array,
+    labels: Array,
+    num_classes: int,
+    *,
+    k: int = 1,
+    threshold_method: str = "mean",
+    method: str = "feature_count",
+    batch_size: int = 512,
+) -> ACAMHead:
+    """Generate templates from a trained front-end over a calibration set."""
+    feats = []
+    fn = jax.jit(feature_fn)
+    for i in range(0, inputs.shape[0], batch_size):
+        feats.append(fn(params, inputs[i : i + batch_size]))
+    features = jnp.concatenate(feats, axis=0)
+    bank = templates.generate_templates(
+        features, labels, num_classes, k=k, threshold_method=threshold_method
+    )
+    return ACAMHead(bank=bank, method=method)
+
+
+class HybridClassifier(NamedTuple):
+    """Front-end params + feature_fn + ACAM head, with the energy report."""
+
+    params: Any
+    feature_fn: Callable[[Any, Array], Array]
+    head: ACAMHead
+
+    def predict(self, x: Array) -> Array:
+        feats = self.feature_fn(self.params, x)
+        pred, _ = self.head(feats)
+        return pred
+
+    def accuracy(self, x: Array, y: Array, *, batch_size: int = 1024) -> float:
+        correct = 0
+        fn = jax.jit(lambda p, xb: self.head(self.feature_fn(p, xb))[0])
+        for i in range(0, x.shape[0], batch_size):
+            pred = fn(self.params, x[i : i + batch_size])
+            correct += int(jnp.sum(pred == y[i : i + batch_size]))
+        return correct / x.shape[0]

@@ -1,0 +1,100 @@
+"""ACAM pattern-matching models (paper §II-D-2, Eq. 8-12).
+
+Two matching models, both vectorised over (batch, class, template):
+
+  feature-count  S_fc(Q,T)  = sum_i 1(Q_i == T_i)                      (Eq. 8)
+  similarity     D(Q,T)     = sum_i out-of-window squared distance     (Eq. 9)
+                 H(Q,T)     = mean_i 1(T^L_i <= Q_i <= T^U_i)          (Eq. 10)
+                 S_sim(Q,T) = H / (1 + alpha * D)                      (Eq. 11)
+  decision       C(Q)       = argmax_j max_k S(Q, T_{j,k})             (Eq. 12,
+                              max over the k templates of each class)
+
+These are the pure-jnp reference implementations; the Pallas TPU kernels in
+`repro.kernels.acam_match` / `repro.kernels.acam_similarity` compute the same
+quantities (kernels' ref.py delegates here).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.templates import TemplateBank
+
+Array = jax.Array
+
+NEG = -jnp.inf
+
+
+def feature_count_scores(queries: Array, templates: Array, valid: Array | None = None) -> Array:
+    """Eq. 8 for a bank of templates.
+
+    queries:   (B, N) binary {0,1}
+    templates: (C, K, N) binary {0,1}
+    returns:   (B, C, K) match counts; invalid templates get -inf.
+    """
+    eq = queries[:, None, None, :] == templates[None, :, :, :]
+    scores = jnp.sum(eq, axis=-1).astype(jnp.float32)
+    if valid is not None:
+        scores = jnp.where(valid[None, :, :], scores, NEG)
+    return scores
+
+
+def similarity_scores(
+    queries: Array,
+    lower: Array,
+    upper: Array,
+    valid: Array | None = None,
+    *,
+    alpha: float = 1.0,
+) -> Array:
+    """Eq. 9-11 for a bank of window templates.
+
+    queries:      (B, N)
+    lower/upper:  (C, K, N)
+    returns:      (B, C, K) similarity scores.
+    """
+    q = queries[:, None, None, :]
+    lo = lower[None, :, :, :]
+    hi = upper[None, :, :, :]
+    above = jnp.maximum(q - hi, 0.0)
+    below = jnp.maximum(lo - q, 0.0)
+    d = jnp.sum(above**2 + below**2, axis=-1)  # Eq. 9
+    hit = jnp.mean((q >= lo) & (q <= hi), axis=-1)  # Eq. 10
+    s = hit / (1.0 + alpha * d)  # Eq. 11
+    if valid is not None:
+        s = jnp.where(valid[None, :, :], s, NEG)
+    return s
+
+
+def classify_scores(scores: Array) -> tuple[Array, Array]:
+    """Eq. 12 with multi-template max-pooling.
+
+    scores: (B, C, K) -> (pred (B,), per_class (B, C)).
+    """
+    per_class = jnp.max(scores, axis=-1)
+    return jnp.argmax(per_class, axis=-1), per_class
+
+
+@functools.partial(jax.jit, static_argnames=("method", "alpha"))
+def classify(
+    queries: Array,
+    bank: TemplateBank,
+    *,
+    method: str = "feature_count",
+    alpha: float = 1.0,
+) -> tuple[Array, Array]:
+    """End-to-end Eq. 8/11 + Eq. 12. queries are *binary* feature maps."""
+    if method == "feature_count":
+        scores = feature_count_scores(queries, bank.templates, bank.valid)
+    elif method == "similarity":
+        scores = similarity_scores(queries, bank.lower, bank.upper, bank.valid, alpha=alpha)
+    else:
+        raise ValueError(f"unknown matching method {method}")
+    return classify_scores(scores)
+
+
+def winner_take_all(per_class: Array) -> Array:
+    """One-hot WTA output (the analogue WTA network's digital semantics)."""
+    return jax.nn.one_hot(jnp.argmax(per_class, axis=-1), per_class.shape[-1])

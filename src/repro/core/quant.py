@@ -1,0 +1,101 @@
+"""Quantisation schemes (paper §II-C).
+
+Two stages, exactly as the paper describes:
+  1. 8-bit integer quantisation-aware training (QAT) for model weights —
+     fake-quant with a straight-through estimator so the model adapts to
+     reduced precision during training.
+  2. Binary (1-bit) feature-map quantisation for ACAM deployment, using a
+     *mean-based* threshold per feature (the paper shows mean beats median
+     for sparse ReLU feature maps, Fig. 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# 8-bit quantisation-aware training (weights)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(w: Array) -> tuple[Array, Array]:
+    """Symmetric per-tensor int8 quantisation. Returns (q, scale)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+@jax.custom_vjp
+def fake_quant_int8(w: Array) -> Array:
+    """Fake-quantise to int8 grid with a straight-through estimator."""
+    q, scale = quantize_int8(w)
+    return dequantize_int8(q, scale)
+
+
+def _fq_fwd(w):
+    return fake_quant_int8(w), None
+
+
+def _fq_bwd(_, g):
+    return (g,)  # straight-through
+
+
+fake_quant_int8.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_tree(params, *, predicate=None):
+    """Apply fake-quant to every weight leaf (ndim >= 2 by default).
+
+    Biases / norms stay full precision, matching the paper's 8-bit weight
+    scheme.
+    """
+    if predicate is None:
+        predicate = lambda x: x.ndim >= 2
+
+    def f(x):
+        return fake_quant_int8(x) if predicate(x) else x
+
+    return jax.tree_util.tree_map(f, params)
+
+
+# ---------------------------------------------------------------------------
+# Binary feature-map quantisation (mean / median thresholding)
+# ---------------------------------------------------------------------------
+
+def feature_thresholds(
+    features: Array, method: Literal["mean", "median"] = "mean"
+) -> Array:
+    """Per-feature threshold over a set of samples.
+
+    features: (num_samples, num_features). Returns (num_features,).
+
+    The paper's analysis (Fig. 1): ReLU feature maps are sparse, so the mean
+    sits below the median and keeps informative low-magnitude activations
+    above the threshold.
+    """
+    if method == "mean":
+        return jnp.mean(features, axis=0)
+    elif method == "median":
+        return jnp.median(features, axis=0)
+    raise ValueError(f"unknown threshold method: {method}")
+
+
+def binarize(features: Array, thresholds: Array) -> Array:
+    """Binary quantisation: 1 where feature > threshold else 0 (float32)."""
+    return (features > thresholds).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("method",))
+def binarize_with_stats(features: Array, method: str = "mean") -> tuple[Array, Array]:
+    thr = feature_thresholds(features, method)  # type: ignore[arg-type]
+    return binarize(features, thr), thr

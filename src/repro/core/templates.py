@@ -1,0 +1,212 @@
+"""ACAM template generation (paper §II-D-1).
+
+Pipeline: run the trained front-end over the training set, collect the
+penultimate feature maps per class, threshold them (mean- or median-based,
+`repro.core.quant`), and distil them into one or more binary templates per
+class. Multi-template uses k-means on the class's feature maps; silhouette
+scores pick the template count.
+
+Templates come in two flavours matching the two ACAM matching models:
+  - point templates T (binary vector)       -> feature-count matching (Eq. 8)
+  - window templates [T^L, T^U] per feature -> similarity matching (Eq. 9-11)
+Window templates are derived from per-cluster feature statistics
+(mean +/- width * std), which is exactly what is programmed into the RRAM
+pair that defines each TXL cell's matching window.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+Array = jax.Array
+
+
+class TemplateBank(NamedTuple):
+    """Stored ACAM contents.
+
+    templates:  (num_classes, k, num_features)  binary point templates
+    lower:      (num_classes, k, num_features)  window lower bounds
+    upper:      (num_classes, k, num_features)  window upper bounds
+    valid:      (num_classes, k) bool — classes may use fewer than k templates
+    thresholds: (num_features,) binarisation thresholds of the front-end
+    """
+
+    templates: Array
+    lower: Array
+    upper: Array
+    valid: Array
+    thresholds: Array
+
+    @property
+    def num_classes(self) -> int:
+        return self.templates.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.templates.shape[1]
+
+    @property
+    def num_features(self) -> int:
+        return self.templates.shape[2]
+
+
+# ---------------------------------------------------------------------------
+# k-means (pure JAX, deterministic init) + silhouette score
+# ---------------------------------------------------------------------------
+
+def kmeans(
+    x: Array, k: int, *, iters: int = 25, key: Array | None = None
+) -> tuple[Array, Array]:
+    """Lloyd's k-means. Returns (centroids (k,d), assignment (n,)).
+
+    Deterministic k-means++-lite init: first centroid = point closest to the
+    data mean, subsequent centroids = farthest point from current set
+    (deterministic so templates are reproducible run-to-run, matching the
+    paper's program-once flow).
+    """
+    n, d = x.shape
+    # --- init ---
+    mean = jnp.mean(x, axis=0)
+    first = jnp.argmin(jnp.sum((x - mean) ** 2, axis=1))
+    cents = jnp.zeros((k, d), x.dtype).at[0].set(x[first])
+
+    def init_step(i, cents):
+        d2 = jnp.min(
+            jnp.sum((x[:, None, :] - cents[None, :, :]) ** 2, axis=-1)
+            + jnp.where(jnp.arange(k)[None, :] < i, 0.0, jnp.inf),
+            axis=1,
+        )
+        return cents.at[i].set(x[jnp.argmax(d2)])
+
+    cents = jax.lax.fori_loop(1, k, init_step, cents)
+
+    # --- Lloyd iterations ---
+    def step(_, cents):
+        d2 = jnp.sum((x[:, None, :] - cents[None, :, :]) ** 2, axis=-1)
+        assign = jnp.argmin(d2, axis=1)
+        one_hot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+        counts = one_hot.sum(axis=0)  # (k,)
+        sums = one_hot.T @ x  # (k, d)
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1), cents)
+        return new
+
+    cents = jax.lax.fori_loop(0, iters, step, cents)
+    assign = jnp.argmin(jnp.sum((x[:, None, :] - cents[None, :, :]) ** 2, axis=-1), axis=1)
+    return cents, assign
+
+
+def silhouette_score(x: Array, assign: Array, k: int) -> Array:
+    """Mean silhouette coefficient (paper uses it to pick template count).
+
+    O(n^2) pairwise distances — fine for the per-class sample counts used in
+    template generation.
+    """
+    n = x.shape[0]
+    d = jnp.sqrt(jnp.maximum(jnp.sum((x[:, None, :] - x[None, :, :]) ** 2, axis=-1), 0.0))
+    same = assign[:, None] == assign[None, :]
+    eye = jnp.eye(n, dtype=bool)
+    # a(i): mean distance to own cluster (excluding self)
+    own_cnt = jnp.sum(same & ~eye, axis=1)
+    a = jnp.sum(jnp.where(same & ~eye, d, 0.0), axis=1) / jnp.maximum(own_cnt, 1)
+    # b(i): min over other clusters of mean distance
+    cluster_ids = jnp.arange(k)
+    in_c = assign[None, :] == cluster_ids[:, None]  # (k, n)
+    cnt_c = jnp.sum(in_c, axis=1)  # (k,)
+    mean_d_to_c = (d @ in_c.T.astype(d.dtype)) / jnp.maximum(cnt_c[None, :], 1)  # (n,k)
+    not_own = cluster_ids[None, :] != assign[:, None]
+    b = jnp.min(jnp.where(not_own & (cnt_c[None, :] > 0), mean_d_to_c, jnp.inf), axis=1)
+    s = jnp.where(own_cnt > 0, (b - a) / jnp.maximum(jnp.maximum(a, b), 1e-12), 0.0)
+    return jnp.mean(s)
+
+
+# ---------------------------------------------------------------------------
+# Template generation
+# ---------------------------------------------------------------------------
+
+def generate_templates(
+    features: Array,
+    labels: Array,
+    num_classes: int,
+    *,
+    k: int = 1,
+    threshold_method: str = "mean",
+    window_width: float = 1.0,
+    binary_windows: bool = True,
+) -> TemplateBank:
+    """Build the template bank from front-end feature maps.
+
+    features: (n, num_features) float feature maps (penultimate layer).
+    labels:   (n,) int class labels.
+    k:        templates per class (k-means centroids when k > 1).
+
+    Window bounds: per-cluster mean +/- window_width * std in *feature* space,
+    then binarised consistently with the point templates when binary_windows
+    (the paper's deployed configuration is fully binary; real-valued windows
+    are kept for the similarity model ablation).
+    """
+    thresholds = quant.feature_thresholds(features, threshold_method)  # type: ignore[arg-type]
+    nf = features.shape[1]
+
+    tmpl = jnp.zeros((num_classes, k, nf), jnp.float32)
+    lo = jnp.zeros((num_classes, k, nf), jnp.float32)
+    hi = jnp.zeros((num_classes, k, nf), jnp.float32)
+    valid = jnp.zeros((num_classes, k), bool)
+
+    for c in range(num_classes):
+        sel = labels == c
+        xc = features[sel]
+        if xc.shape[0] == 0:
+            continue
+        if k == 1 or xc.shape[0] < k:
+            cents = jnp.mean(xc, axis=0, keepdims=True)  # (1, nf)
+            assign = jnp.zeros((xc.shape[0],), jnp.int32)
+            used = 1
+        else:
+            cents, assign = kmeans(xc, k)
+            used = k
+        for j in range(used):
+            members = xc[assign == j] if used > 1 else xc
+            if members.shape[0] == 0:
+                continue
+            mu = jnp.mean(members, axis=0)
+            sd = jnp.std(members, axis=0)
+            tmpl = tmpl.at[c, j].set(quant.binarize(mu[None], thresholds)[0])
+            l_, u_ = mu - window_width * sd, mu + window_width * sd
+            if binary_windows:
+                l_ = quant.binarize(l_[None], thresholds)[0]
+                u_ = quant.binarize(u_[None], thresholds)[0]
+                u_ = jnp.maximum(u_, l_)
+            lo = lo.at[c, j].set(l_)
+            hi = hi.at[c, j].set(u_)
+            valid = valid.at[c, j].set(True)
+
+    return TemplateBank(tmpl, lo, hi, valid, thresholds)
+
+
+def select_k_by_silhouette(
+    features: Array, labels: Array, num_classes: int, candidate_ks=(1, 2, 3)
+) -> tuple[int, dict[int, float]]:
+    """Pick templates-per-class by mean per-class silhouette (paper §II-D-1).
+
+    k=1 gets silhouette 0 by convention (no clustering structure claim);
+    larger k wins only if clustering is genuinely separated.
+    """
+    scores: dict[int, float] = {}
+    for k in candidate_ks:
+        if k == 1:
+            scores[1] = 0.0
+            continue
+        per_class = []
+        for c in range(num_classes):
+            xc = features[labels == c]
+            if xc.shape[0] <= k:
+                continue
+            _, assign = kmeans(xc, k)
+            per_class.append(float(silhouette_score(xc, assign, k)))
+        scores[k] = float(jnp.mean(jnp.asarray(per_class))) if per_class else -1.0
+    best = max(scores, key=lambda kk: scores[kk])
+    return best, scores

@@ -1,0 +1,87 @@
+"""Process-wide mesh-axis context.
+
+Model code (e.g. the MoE dispatch buffer) occasionally needs
+`with_sharding_constraint` hints, but must stay mesh-agnostic and runnable on
+a single CPU device. Launchers set the axis names here; when unset, model
+code applies no constraints.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+class MeshAxes(NamedTuple):
+    dp: tuple | str  # data-parallel axes ("data" or ("pod","data"))
+    model: str
+
+
+_AXES: MeshAxes | None = None
+_MESH = None
+
+
+def set_mesh_axes(dp, model: str = "model", mesh=None) -> None:
+    global _AXES, _MESH
+    _AXES = MeshAxes(dp, model)
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def clear() -> None:
+    global _AXES, _MESH, _LAYER_CONSTRAINT, _HEAD_CONSTRAINT
+    _AXES = None
+    _MESH = None
+    _LAYER_CONSTRAINT = None
+    _HEAD_CONSTRAINT = None
+
+
+def get() -> MeshAxes | None:
+    return _AXES
+
+
+def constrain(x, *spec) -> jax.Array:
+    """Apply a sharding constraint if a mesh context is active.
+
+    spec entries: "dp", "model", or None — translated via the active axes.
+    """
+    ax = get()
+    if ax is None:
+        return x
+    resolved = tuple(ax.dp if s == "dp" else (ax.model if s == "model" else None)
+                     for s in spec)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))
+
+
+# --- ZeRO-3 gather-at-use -------------------------------------------------
+# FSDP-sharded weights must be all-gathered to their TP compute sharding at
+# the point of use; left to its own devices GSPMD sometimes resolves the
+# dp-axis conflict by all-gathering the *batch* instead (observed on the
+# embed/unembed einsums: 8 GB of batch traffic vs 16 MB of weight traffic).
+# The step builders register a constraint fn mapping a single layer's param
+# subtree to compute shardings; model code applies it at layer entry.
+
+_LAYER_CONSTRAINT = None
+_HEAD_CONSTRAINT = None
+
+
+def set_layer_constraint(fn) -> None:
+    global _LAYER_CONSTRAINT
+    _LAYER_CONSTRAINT = fn
+
+
+def set_head_constraint(fn) -> None:
+    global _HEAD_CONSTRAINT
+    _HEAD_CONSTRAINT = fn
+
+
+def constrain_layer(layer_params):
+    return _LAYER_CONSTRAINT(layer_params) if _LAYER_CONSTRAINT else layer_params
+
+
+def constrain_head(head_params):
+    return _HEAD_CONSTRAINT(head_params) if _HEAD_CONSTRAINT else head_params

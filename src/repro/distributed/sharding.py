@@ -1,0 +1,247 @@
+"""Sharding rules: logical param/activation axes -> mesh PartitionSpecs.
+
+Mesh axes (launch/mesh.py): single pod ("data", "model") = (16, 16);
+multi-pod ("pod", "data", "model") = (2, 16, 16). "model" is the tensor/
+expert-parallel axis; ("pod","data") is the data-parallel + FSDP axis.
+
+Two rule sets:
+  tp      — params sharded over "model" only (replicated across data): decode
+            latency path for small models.
+  fsdp_tp — additionally shards the non-TP weight axis over ("pod","data")
+            (ZeRO-3); GSPMD inserts the gather/reduce-scatter pairs. Required
+            for >=14B training and >=42B serving.
+
+Rules are by param-tree path, so they apply to any architecture in the zoo.
+All "layers/*" leaves carry a leading stacked-layer axis (never sharded).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+
+PyTree = Any
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return out
+
+
+def param_spec(names: list[str], ndim: int, *, mode: str, fsdp) -> P:
+    """PartitionSpec for one param leaf addressed by its tree path."""
+    w = fsdp if mode == "fsdp_tp" else None
+    in_layers = names[0] == "layers"
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+
+    def wrap(*spec):
+        # prepend the stacked-layer axis
+        return P(*(((None,) + spec) if in_layers else spec))
+
+    # --- non-layer leaves ---
+    if not in_layers:
+        if names[0] == "embed":
+            # d over model, vocab unsharded: the token gather stays local
+            # (GSPMD handles gathers over non-indexed sharded dims only).
+            return P(None, "model")  # (V, d)
+        if names[0] == "unembed":
+            return P(w, "model") if leaf == "w" else P("model")
+        return P(None)  # final_norm etc.
+
+    # --- norms / scalars ---
+    if leaf in ("scale", "bias") or parent.endswith("norm") or leaf in (
+            "A_log", "D", "dt_bias", "conv_w"):
+        return wrap(*([None] * (ndim - 1)))
+
+    # --- MoE experts: E over "model" (expert parallelism) ---
+    if parent == "moe" or (len(names) >= 3 and names[-3] == "moe"):
+        if parent == "router":
+            return wrap(w, None)  # (d, E)
+        if leaf in ("gate", "up"):
+            return wrap("model", w, None)  # (E, d, f)
+        if leaf == "down":
+            return wrap("model", None, w)  # (E, f, d)
+        # shared expert (mlp-shaped)
+        if parent in ("gate", "up"):
+            return wrap(w, "model") if leaf == "w" else wrap("model")
+        if parent == "down":
+            return wrap("model", w) if leaf == "w" else wrap(w)
+
+    # --- attention ---
+    if parent in ("q", "k", "v"):
+        return wrap(w, "model") if leaf == "w" else wrap("model")
+    if parent == "o":
+        return wrap("model", w) if leaf == "w" else wrap(w)
+    # MLA projections
+    if parent in ("q_a", "kv_a"):
+        return wrap(w, None) if leaf == "w" else wrap(None)
+    if parent in ("q_b", "kv_b"):
+        return wrap(w, "model") if leaf == "w" else wrap("model")
+
+    # --- dense MLP ---
+    if parent in ("gate", "up"):
+        return wrap(w, "model") if leaf == "w" else wrap("model")
+    if parent == "down":
+        return wrap("model", w) if leaf == "w" else wrap(w)
+
+    # --- SSM (mamba2/hymba): packed projections; TP on the model axis is a
+    # documented hillclimb item (DESIGN.md) — baseline shards FSDP only. ---
+    if parent == "in_proj":
+        return wrap(w, None) if leaf == "w" else wrap(None)
+    if parent == "out_proj":
+        return wrap(None, w) if leaf == "w" else wrap(w)
+
+    return wrap(*([None] * (ndim - 1)))
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on axes whose size does not divide the mesh extent
+    (pjit rejects explicit non-divisible shardings; e.g. mamba2's vocab
+    50280 % 16, hymba's 32001, hubert's 504, and batch=1 decode)."""
+    fitted = []
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    for dim, axis in zip(shape, entries):
+        if axis is None:
+            fitted.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        fitted.append(axis if dim % size == 0 else None)
+    return P(*fitted)
+
+
+def fit_tree(specs: PyTree, shapes: PyTree, mesh: Mesh) -> PyTree:
+    """fit_spec over a pytree of specs + matching ShapeDtypeStructs."""
+    return jax.tree_util.tree_map(
+        lambda s, x: fit_spec(s, x.shape, mesh), specs, shapes,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: lm.ArchConfig, mesh: Mesh, mode: str = "fsdp_tp") -> PyTree:
+    """Pytree of PartitionSpec matching init_params(cfg) (divisibility-fitted)."""
+    shapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    fsdp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        raw = param_spec(_path_names(path), leaf.ndim, mode=mode, fsdp=fsdp)
+        return fit_spec(raw, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, shapes)
+
+
+def opt_state_specs(param_sp: PyTree) -> Any:
+    """Optimiser moments mirror the params; step is replicated."""
+    from repro.optim.optimizers import OptState
+
+    return OptState(step=P(), mu=param_sp, nu=param_sp)
+
+
+def batch_specs(cfg: lm.ArchConfig, mesh: Mesh) -> dict:
+    dp = dp_axes(mesh)
+    specs = {"inputs": P(dp, None, None) if cfg.input_mode == "embeds" else P(dp, None),
+             "labels": P(dp, None)}
+    if cfg.rope == "mrope":
+        specs["positions"] = P(None, dp, None)
+    return specs
+
+
+def cache_specs(cfg: lm.ArchConfig, mesh: Mesh) -> lm.Cache:
+    """Serving-cache shardings.
+
+    Attention KV: sequence axis over "model" (flash-decoding style partial
+    attention; GSPMD inserts the softmax reductions) — robust to any kv-head
+    count. SSM states: heads over "model". Batch always over data.
+    """
+    dp = dp_axes(mesh)
+    k = v = c_kv = k_rope = conv = ssm = None
+    if cfg.ssm or cfg.hybrid:
+        conv = P(None, dp, None, None)
+        ssm = P(None, dp, "model", None, None)
+    if cfg.mla:
+        c_kv = P(None, dp, "model", None)
+        k_rope = P(None, dp, "model", None)
+    elif cfg.uses_attention:
+        if cfg.sliding_window:
+            k = v = P(None, dp, None, None, None)  # small ring buffer
+        else:
+            k = v = P(None, dp, "model", None, None)
+    return lm.Cache(k=k, v=v, c_kv=c_kv, k_rope=k_rope, conv=conv, ssm=ssm,
+                    length=P())
+
+
+def to_shardings(specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def register_zero3_constraints(cfg: lm.ArchConfig, mesh: Mesh, mode: str) -> None:
+    """Install gather-at-use constraints (see distributed.context).
+
+    Storage sharding is `mode` (fsdp_tp shards a weight axis over dp);
+    compute sharding is the "tp" rule set. Constraining each layer's params
+    to compute sharding inside the scan body makes GSPMD all-gather exactly
+    one layer's weights at a time (ZeRO-3 streaming); gradients are
+    reduce-scattered back by the transpose of the same constraint.
+    """
+    from repro.distributed import context as mesh_ctx
+
+    if mode != "fsdp_tp":
+        mesh_ctx.set_layer_constraint(None)
+        mesh_ctx.set_head_constraint(None)
+        return
+    compute = param_specs(cfg, mesh, "tp")
+    layer_compute = jax.tree_util.tree_map(
+        lambda s: P(*s[1:]), compute["layers"],
+        is_leaf=lambda x: isinstance(x, P))
+    head_compute = {k: v for k, v in compute.items() if k != "layers"}
+
+    def constrain_layer(layer_p):
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            layer_p, layer_compute)
+
+    def constrain_head(head_p):
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            head_p, {k: head_compute[k] for k in head_p})
+
+    mesh_ctx.set_layer_constraint(constrain_layer)
+    mesh_ctx.set_head_constraint(constrain_head)
+
+
+def validate_divisibility(cfg: lm.ArchConfig, mesh: Mesh, mode: str) -> list[str]:
+    """Report param axes that do not divide evenly over their mesh axes
+    (GSPMD pads these — allowed, but we surface them for the roofline)."""
+    shapes = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    specs = param_specs(cfg, mesh, mode)
+    msgs = []
+
+    def check(path, leaf, spec):
+        names = "/".join(_path_names(path))
+        for dim, axis in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if dim % size:
+                msgs.append(f"{names}: dim {dim} % {size} != 0 (padded)")
+
+    jax.tree_util.tree_map_with_path(check, shapes, specs)
+    return msgs

@@ -1,0 +1,96 @@
+"""Elastic scaling + straggler mitigation.
+
+Elastic re-mesh: a checkpoint written on mesh A restores onto mesh B with a
+different data-parallel degree (node loss / scale-up). Because checkpoints
+are stored as full logical arrays (repro.checkpoint) and shardings are
+recomputed from the *target* mesh's rules, `remesh_restore` is just
+restore + device_put with the new shardings; the training batch schedule is
+rescaled so the global batch is preserved (grad-accum picks up the slack).
+
+Straggler mitigation: `StragglerMonitor` tracks per-step heartbeats; steps
+whose stragglers exceed the deadline are flagged so the launcher can (a)
+skip the slow host's microbatch contribution this step (bounded staleness)
+or (b) trigger elastic re-mesh without it. On a single host we exercise the
+bookkeeping + policy logic; the collective hooks are where a multi-host
+deployment plugs in.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+PyTree = Any
+
+
+def remesh_restore(ckpt: Checkpointer, step: int, like: PyTree,
+                   new_mesh, new_specs: PyTree) -> PyTree:
+    """Restore `step` onto a different mesh/sharding (elastic restart)."""
+    from repro.distributed.sharding import to_shardings
+
+    shardings = to_shardings(new_specs, new_mesh)
+    return ckpt.restore(step, like, shardings=shardings)
+
+
+def rescale_schedule(global_batch: int, old_hosts: int, new_hosts: int,
+                     per_host_batch: int) -> dict:
+    """Keep the global batch constant across an elastic resize via
+    gradient accumulation."""
+    new_per_step = new_hosts * per_host_batch
+    accum = max(1, -(-global_batch // new_per_step))
+    return {
+        "grad_accum_steps": accum,
+        "per_host_batch": per_host_batch,
+        "effective_global_batch": accum * new_per_step,
+    }
+
+
+@dataclass
+class StragglerMonitor:
+    """Deadline-based straggler detection over per-host step heartbeats."""
+
+    n_hosts: int
+    deadline_factor: float = 2.0  # x median step time
+    min_deadline_s: float = 1.0
+    history: list[float] = field(default_factory=list)
+    flagged: dict[int, int] = field(default_factory=dict)  # host -> strikes
+    evict_after: int = 3
+
+    def step_times(self, times_s: dict[int, float]) -> dict:
+        """Feed per-host durations for one step; returns the policy verdict."""
+        med = sorted(times_s.values())[len(times_s) // 2]
+        self.history.append(med)
+        deadline = max(self.min_deadline_s, self.deadline_factor * med)
+        slow = [h for h, t in times_s.items() if t > deadline]
+        for h in slow:
+            self.flagged[h] = self.flagged.get(h, 0) + 1
+        for h in list(self.flagged):
+            if h not in slow:
+                self.flagged[h] = 0
+        evict = [h for h, strikes in self.flagged.items()
+                 if strikes >= self.evict_after]
+        return {
+            "deadline_s": deadline,
+            "stragglers": slow,
+            "evict": evict,  # launcher responds with elastic re-mesh
+            "skip_contribution": slow,  # bounded-staleness option
+        }
+
+
+class Heartbeat:
+    """Minimal liveness tracker the launcher polls between steps."""
+
+    def __init__(self, timeout_s: float = 60.0):
+        self.timeout_s = timeout_s
+        self.last: dict[int, float] = {}
+
+    def beat(self, host: int, now: float | None = None) -> None:
+        self.last[host] = time.monotonic() if now is None else now
+
+    def dead_hosts(self, now: float | None = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self.last.items() if now - t > self.timeout_s]

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: ACAM feature-count matching (paper Eq. 8).
+
+TPU adaptation (DESIGN.md §4): the binary match count
+    S_fc(Q, T) = sum_i 1(Q_i == T_i)
+is a Hamming affinity. GPU implementations reach for XNOR/popcount; the TPU
+has no popcount path that beats the MXU, but with bits encoded as +/-1 bf16:
+
+    S_fc = (N + Q~ . T~^T) / 2,     Q~ = 2Q-1, T~ = 2T-1
+
+— a plain matmul. The kernel fuses the *binarisation* (mean-threshold
+compare, paper §II-C) and the bipolar encoding into the K-loop so the binary
+feature map never round-trips to HBM, then runs an MXU-tiled matmul:
+
+    grid = (B/bm, M/bn, N/bk)           (k innermost: VMEM accumulation)
+    features block (bm, bk)  VMEM
+    thresholds block (1, bk) VMEM
+    templates block (bn, bk) VMEM       (stored {0,1}, encoded on the fly)
+    out block (bm, bn) f32   VMEM accumulator
+
+All block dims are multiples of (8, 128) so MXU/VREG tiling is aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (128, 128, 512)  # bm, bn, bk
+
+
+def _kernel(f_ref, thr_ref, t_ref, o_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    f = f_ref[...]  # (bm, bk) raw features
+    thr = thr_ref[...]  # (1, bk)
+    t = t_ref[...]  # (bn, bk) binary {0,1} template
+
+    q_pm = jnp.where(f > thr, 1.0, -1.0).astype(jnp.bfloat16)  # fused binarise
+    t_pm = (2.0 * t - 1.0).astype(jnp.bfloat16)
+    # MXU matmul on bipolar codes; f32 accumulate
+    acc = jax.lax.dot_general(
+        q_pm, t_pm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def acam_match(features: jax.Array, thresholds: jax.Array,
+               templates: jax.Array, *, block=DEFAULT_BLOCK,
+               interpret: bool = False) -> jax.Array:
+    """Match scores (B, M): count of features agreeing with each template.
+
+    features:   (B, N) float — raw front-end feature maps
+    thresholds: (N,) float — per-feature binarisation thresholds
+    templates:  (M, N) float {0, 1} — programmed ACAM point templates
+    """
+    b, n = features.shape
+    m = templates.shape[0]
+    bm, bn, bk = block
+    bp, mp, np_ = (-(-b // bm) * bm, -(-m // bn) * bn, -(-n // bk) * bk)
+
+    f = jnp.pad(features, ((0, bp - b), (0, np_ - n)))
+    # pad thresholds with +inf so padded features binarise to -1 on BOTH the
+    # query and (0-padded) template side: they agree, adding a constant that
+    # cancels in the bipolar identity below.
+    thr = jnp.pad(thresholds, (0, np_ - n), constant_values=jnp.inf)[None, :]
+    t = jnp.pad(templates, ((0, mp - m), (0, np_ - n)))
+
+    nk = np_ // bk
+    grid = (bp // bm, mp // bn, nk)
+    dot = pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, bk), lambda i, j, k: (0, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.float32),
+        interpret=interpret,
+    )(f, thr, t)
+    # bipolar identity: matches = (N_padded + dot)/2 minus the padded-column
+    # contribution (pad columns always "match": (-1)*(-1)=+1), i.e. use the
+    # true N in the correction term.
+    scores = (np_ + dot[:b, :m]) * 0.5 - (np_ - n)
+    return scores

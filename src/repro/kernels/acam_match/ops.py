@@ -1,0 +1,39 @@
+"""jit'd public wrapper for the acam_match kernel.
+
+`match_scores` runs the Pallas kernel (interpret=True on CPU, compiled on
+TPU); `classify` adds the WTA argmax epilogue (Eq. 12) with multi-template
+max-pooling, mirroring repro.core.matching.classify semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.acam_match.acam_match import DEFAULT_BLOCK, acam_match
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def match_scores(features: jax.Array, thresholds: jax.Array,
+                 templates: jax.Array, *, block=DEFAULT_BLOCK) -> jax.Array:
+    return acam_match(features, thresholds, templates, block=block,
+                      interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "block"))
+def classify(features: jax.Array, thresholds: jax.Array,
+             templates_flat: jax.Array, valid_flat: jax.Array,
+             num_classes: int, *, block=DEFAULT_BLOCK) -> tuple[jax.Array, jax.Array]:
+    """templates_flat: (C*K, N) class-major; valid_flat: (C*K,) bool.
+
+    Returns (pred (B,), per_class (B, C))."""
+    scores = match_scores(features, thresholds, templates_flat, block=block)
+    scores = jnp.where(valid_flat[None, :], scores, -jnp.inf)
+    k = templates_flat.shape[0] // num_classes
+    per_class = jnp.max(scores.reshape(scores.shape[0], num_classes, k), axis=-1)
+    return jnp.argmax(per_class, axis=-1), per_class

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the acam_match kernel (paper Eq. 8)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def acam_match_ref(features: jax.Array, thresholds: jax.Array,
+                   templates: jax.Array) -> jax.Array:
+    """(B, M) count of agreeing features: S = sum_i 1(Q_i == T_i)."""
+    q = (features > thresholds[None, :]).astype(jnp.float32)
+    eq = q[:, None, :] == templates[None, :, :]
+    return jnp.sum(eq, axis=-1).astype(jnp.float32)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: ACAM similarity matching (paper Eq. 9-11).
+
+Per (query, template) pair with matching window [T^L, T^U] per cell:
+
+    D = sum_i relu(Q_i - U_i)^2 + relu(L_i - Q_i)^2       (Eq. 9)
+    H = (1/N) sum_i 1(L_i <= Q_i <= U_i)                  (Eq. 10)
+    S = H / (1 + alpha * D)                               (Eq. 11)
+
+This is the behavioural model of the analogue TXL array: D is the
+out-of-window penalty, H the matchline hit fraction. The kernel is a
+bandwidth-bound VPU fusion: grid (B/bm, M/bn, N/bk), broadcasting query and
+window blocks to a (bm, bn, bk) VMEM tile, accumulating D and H into two
+(bm, bn) f32 VMEM accumulators across the k loop, applying the Eq. 11
+epilogue on the last k step — the (B, M, N) intermediate never exists in
+HBM (the jnp oracle materialises it, which is exactly why this kernel
+exists).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (8, 128, 128)  # bm (queries), bn (templates), bk (features)
+
+
+def _kernel(q_ref, lo_ref, hi_ref, d_ref, h_ref, s_ref, *, nk: int,
+            alpha: float, n_true: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        d_ref[...] = jnp.zeros_like(d_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    q = q_ref[...][:, None, :]  # (bm, 1, bk)
+    lo = lo_ref[...][None, :, :]  # (1, bn, bk)
+    hi = hi_ref[...][None, :, :]
+
+    above = jnp.maximum(q - hi, 0.0)
+    below = jnp.maximum(lo - q, 0.0)
+    d_ref[...] += jnp.sum(above * above + below * below, axis=-1)
+    hit = jnp.logical_and(q >= lo, q <= hi)
+    h_ref[...] += jnp.sum(hit.astype(jnp.float32), axis=-1)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        # padded feature columns have lo=0=hi and q=0 => they count as hits;
+        # subtract the pad count from H before normalising by the true N.
+        pad_hits = float(nk * q_ref.shape[-1] - n_true)
+        h = (h_ref[...] - pad_hits) / float(n_true)
+        s_ref[...] = h / (1.0 + alpha * d_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "block", "interpret"))
+def acam_similarity(queries: jax.Array, lower: jax.Array, upper: jax.Array,
+                    *, alpha: float = 1.0, block=DEFAULT_BLOCK,
+                    interpret: bool = False) -> jax.Array:
+    """Similarity scores (B, M) for window templates.
+
+    queries: (B, N); lower/upper: (M, N) with lower <= upper.
+    """
+    b, n = queries.shape
+    m = lower.shape[0]
+    bm, bn, bk = block
+    bp, mp, np_ = (-(-b // bm) * bm, -(-m // bn) * bn, -(-n // bk) * bk)
+
+    q = jnp.pad(queries, ((0, bp - b), (0, np_ - n)))
+    lo = jnp.pad(lower, ((0, mp - m), (0, np_ - n)))
+    hi = jnp.pad(upper, ((0, mp - m), (0, np_ - n)))
+
+    nk = np_ // bk
+    grid = (bp // bm, mp // bn, nk)
+    _, _, s = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, alpha=alpha, n_true=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, mp), jnp.float32),  # D accumulator
+            jax.ShapeDtypeStruct((bp, mp), jnp.float32),  # H accumulator
+            jax.ShapeDtypeStruct((bp, mp), jnp.float32),  # S
+        ],
+        interpret=interpret,
+    )(q.astype(jnp.float32), lo.astype(jnp.float32), hi.astype(jnp.float32))
+    return s[:b, :m]

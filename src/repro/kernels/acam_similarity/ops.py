@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the acam_similarity kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.acam_similarity.acam_similarity import (
+    DEFAULT_BLOCK, acam_similarity)
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "block"))
+def similarity_scores(queries: jax.Array, lower: jax.Array, upper: jax.Array,
+                      *, alpha: float = 1.0, block=DEFAULT_BLOCK) -> jax.Array:
+    return acam_similarity(queries, lower, upper, alpha=alpha, block=block,
+                           interpret=_on_cpu())
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "alpha", "block"))
+def classify(queries: jax.Array, lower_flat: jax.Array, upper_flat: jax.Array,
+             valid_flat: jax.Array, num_classes: int, *, alpha: float = 1.0,
+             block=DEFAULT_BLOCK) -> tuple[jax.Array, jax.Array]:
+    """Eq. 12 decision over a class-major flattened window-template bank."""
+    s = similarity_scores(queries, lower_flat, upper_flat, alpha=alpha,
+                          block=block)
+    s = jnp.where(valid_flat[None, :], s, -jnp.inf)
+    k = lower_flat.shape[0] // num_classes
+    per_class = jnp.max(s.reshape(s.shape[0], num_classes, k), axis=-1)
+    return jnp.argmax(per_class, axis=-1), per_class

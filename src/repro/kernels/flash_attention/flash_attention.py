@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+The XLA fallback (repro.models.layers.chunked_attention) streams q-chunks
+but still materialises (bq, Sk) scores per chunk in HBM on CPU; on TPU this
+kernel keeps the whole online-softmax state in VMEM:
+
+    grid = (B*H, Sq/bq, Sk/bk)   (k innermost)
+    q block  (1, bq, D)  VMEM      kv blocks (1, bk, D) VMEM
+    scratch  m (bq, 128), l (bq, 128), acc (bq, D)  f32 VMEM
+
+Causal masking skips fully-masked kv blocks via pl.when (no MXU work issued
+for the upper triangle — the ~2x causal saving the XLA fallback lacks).
+GQA is handled in ops.py by reshaping kv-head groups into the batch dim.
+Backward pass: the training path keeps the XLA fallback under remat (a
+custom VJP kernel is listed as future work in DESIGN.md); this kernel
+targets the serving/prefill path, which is where the 32k cells run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = (512, 512)  # bq, bk
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc,
+            *, nk: int, bq: int, bk: int, causal: bool, scale: float,
+            sk_true: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    # causal: kv block strictly above the diagonal of this q block -> skip
+    live = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0]  # (bq, d)
+        k = k_ref[0]  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < sk_true  # padded keys never win
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        s = jnp.where(mask, s, NEG)
+        m_old = m_sc[:, :1]  # (bq, 1)
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        corr = jnp.exp(m_old - m_new)  # (bq, 1)
+        l_sc[:, :1] = l_sc[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[:, :1] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_sc[:, :1]
+        o_ref[0] = (acc_sc[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block=DEFAULT_BLOCK,
+                    interpret: bool = False) -> jax.Array:
+    """q, k, v: (BH, S, D) (heads pre-flattened into batch). Returns (BH, Sq, D)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    bq, bk = block
+    bq, bk = min(bq, sq), min(bk, sk)
+    sqp, skp = -(-sq // bq) * bq, -(-sk // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, sqp - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skp - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skp - sk), (0, 0)))
+    nk = skp // bk
+    scale = d ** -0.5
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, bq=bq, bk=bk, causal=causal,
+                          scale=scale, sk_true=sk),
+        grid=(bh, sqp // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq]

@@ -1,0 +1,36 @@
+"""jit'd public wrapper: GQA-aware flash attention entry point.
+
+Accepts model-layout tensors q (B, S, H, D), k/v (B, S, KV, D); expands GQA
+groups and flattens (B, H) into the kernel's batch dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    DEFAULT_BLOCK, flash_attention)
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, block=DEFAULT_BLOCK) -> jax.Array:
+    """(B, S, H, D) x (B, S, KV, D) -> (B, S, H, D)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q3 = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    k3 = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    v3 = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    o = flash_attention(q3, k3, v3, causal=causal, block=block,
+                        interpret=_on_cpu())
+    return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

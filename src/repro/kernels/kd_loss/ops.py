@@ -1,0 +1,28 @@
+"""jit'd public wrapper for the kd_loss kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kd_loss.kd_loss import DEFAULT_BLOCK, kd_loss
+
+
+def _on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "alpha", "block"))
+def distillation_loss(student_logits: jax.Array, teacher_logits: jax.Array,
+                      labels: jax.Array, *, temperature: float = 4.0,
+                      alpha: float = 0.5, block=DEFAULT_BLOCK) -> jax.Array:
+    """Mean fused KD loss (paper Eq. 1). Accepts (B, V) or (B, S, V)."""
+    zs, zt, y = student_logits, teacher_logits, labels
+    if zs.ndim == 3:
+        zs = zs.reshape(-1, zs.shape[-1])
+        zt = zt.reshape(-1, zt.shape[-1])
+        y = y.reshape(-1)
+    per = kd_loss(zs, zt, y, temperature=temperature, alpha=alpha,
+                  block=block, interpret=_on_cpu())
+    return jnp.mean(per)

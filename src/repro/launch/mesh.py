@@ -1,0 +1,21 @@
+"""Production mesh definitions (multi-pod dry-run spec).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e-256 pod mesh: (data=16, model=16); two pods add a leading
+    "pod" axis: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke tests (axes kept for spec parity)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

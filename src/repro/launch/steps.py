@@ -1,0 +1,239 @@
+"""jit-able step functions (train / prefill / decode) with their shardings.
+
+These are shared by the real launcher (launch/train.py, launch/serve.py) and
+the dry-run (launch/dryrun.py). Each builder returns (fn, in_shardings,
+out_shardings, arg_specs) so the dry-run can `.lower().compile()` with
+ShapeDtypeStructs and the launcher can run with real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding
+from repro.models import lm
+from repro.optim import optimizers as optim
+
+PyTree = Any
+
+
+def make_optimizer(cfg: lm.ArchConfig, lr: float = 3e-4) -> optim.Optimizer:
+    return optim.adamw(lr, weight_decay=0.1)
+
+
+def build_train_step(cfg: lm.ArchConfig, mesh: Mesh, *, mode: str = "fsdp_tp",
+                     lr: float = 3e-4, donate: bool = True,
+                     example_batch=None):
+    """train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    sharding.register_zero3_constraints(cfg, mesh, mode)
+    opt = make_optimizer(cfg, lr)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, cfg, batch))(params)
+        grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    p_specs = sharding.param_specs(cfg, mesh, mode)
+    o_specs = sharding.opt_state_specs(p_specs)
+    b_specs = sharding.batch_specs(cfg, mesh)
+    if example_batch is not None:
+        b_specs = sharding.fit_tree(b_specs, example_batch, mesh)
+    metric_specs = {"loss": P(), "grad_norm": P()}
+    in_specs = (p_specs, o_specs, b_specs)
+    out_specs = (p_specs, o_specs, metric_specs)
+    jit_kwargs = dict(
+        in_shardings=sharding.to_shardings(in_specs, mesh),
+        out_shardings=sharding.to_shardings(out_specs, mesh),
+    )
+    if donate:
+        jit_kwargs["donate_argnums"] = (0, 1)
+    return jax.jit(train_step, **jit_kwargs), in_specs, out_specs, opt
+
+
+def build_prefill_step(cfg: lm.ArchConfig, mesh: Mesh, *, mode: str = "fsdp_tp",
+                       max_len: int | None = None, example_args=None):
+    """prefill(params, inputs[, positions]) -> (last_logits, cache)."""
+
+    def prefill_step(params, inputs, positions=None):
+        return lm.prefill(params, cfg, inputs, positions, max_len=max_len)
+
+    sharding.register_zero3_constraints(cfg, mesh, mode)
+    dp = sharding.dp_axes(mesh)
+    p_specs = sharding.param_specs(cfg, mesh, mode)
+    in_sp: tuple = (p_specs,
+                    P(dp, None, None) if cfg.input_mode == "embeds" else P(dp, None))
+    if cfg.rope == "mrope":
+        in_sp += (P(None, dp, None),)
+    out_sp = (P(dp, "model"), sharding.cache_specs(cfg, mesh))
+    if example_args is not None:
+        in_sp = sharding.fit_tree(in_sp, example_args, mesh)
+        out_shapes = jax.eval_shape(prefill_step, *example_args)
+        out_sp = sharding.fit_tree(out_sp, out_shapes, mesh)
+    fn = jax.jit(
+        prefill_step,
+        in_shardings=sharding.to_shardings(in_sp, mesh),
+        out_shardings=sharding.to_shardings(out_sp, mesh),
+    )
+    return fn, in_sp, out_sp
+
+
+def build_decode_step(cfg: lm.ArchConfig, mesh: Mesh, *, mode: str = "fsdp_tp",
+                      donate: bool = True, example_args=None):
+    """decode(params, tokens, cache) -> (logits, cache). Cache donated."""
+
+    def decode_step(params, tokens, cache):
+        return lm.decode_step(params, cfg, tokens, cache)
+
+    sharding.register_zero3_constraints(cfg, mesh, mode)
+    dp = sharding.dp_axes(mesh)
+    p_specs = sharding.param_specs(cfg, mesh, mode)
+    tok_sp = P(dp, None, None) if cfg.input_mode == "embeds" else P(dp, None)
+    cache_sp = sharding.cache_specs(cfg, mesh)
+    in_sp = (p_specs, tok_sp, cache_sp)
+    out_sp = (P(dp, None, "model"), cache_sp)
+    if example_args is not None:
+        in_sp = sharding.fit_tree(in_sp, example_args, mesh)
+        out_shapes = jax.eval_shape(decode_step, *example_args)
+        out_sp = sharding.fit_tree(out_sp, out_shapes, mesh)
+    jit_kwargs = dict(
+        in_shardings=sharding.to_shardings(in_sp, mesh),
+        out_shardings=sharding.to_shardings(out_sp, mesh),
+    )
+    if donate:
+        jit_kwargs["donate_argnums"] = (2,)
+    fn = jax.jit(decode_step, **jit_kwargs)
+    return fn, in_sp, out_sp
+
+
+# ---------------------------------------------------------------------------
+# per-layer probes (exact roofline terms; see launch/dryrun.py)
+# ---------------------------------------------------------------------------
+
+def build_layer_probe(cfg: lm.ArchConfig, mesh: Mesh, *, kind: str,
+                      seq: int, batch: int, mode: str = "fsdp_tp",
+                      with_grad: bool) -> tuple[Callable, tuple, tuple]:
+    """A single transformer layer at cell shapes/shardings.
+
+    kind: "train"/"prefill" run the full-sequence layer; "decode" the
+    single-token layer with this layer's cache slice. cost_analysis of the
+    compiled probe x n_layers gives the scan-body contribution that XLA's
+    cost analysis reports only once (see dryrun.py docstring).
+    """
+    from repro.models.lm import (_layer_train, _layer_decode, _default_positions,
+                                 init_cache)
+
+    sharding.register_zero3_constraints(cfg, mesh, mode)
+    dp = sharding.dp_axes(mesh)
+    full_p = sharding.param_specs(cfg, mesh, mode)
+    layer_specs = jax.tree_util.tree_map(
+        lambda s: P(*s[1:]), full_p["layers"],
+        is_leaf=lambda x: isinstance(x, P))
+    layer_shapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+        jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))["layers"])
+
+    h_spec = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.dtype)
+
+    # precomputed rope tables are scan-invariant in the real model: the probe
+    # takes them as *inputs* so their (once-per-step) construction cost does
+    # not get charged per layer.
+    use_tabs = (cfg.precompute_rope and cfg.rope == "standard"
+                and cfg.uses_attention)
+    tab_d = (cfg.qk_rope_dim if cfg.mla else cfg.head_dim) // 2
+    tab_spec = jax.ShapeDtypeStruct((batch, seq, tab_d), jnp.float32)
+
+    if kind in ("train", "prefill"):
+        def probe(layer_p, h, *tabs):
+            pos = _default_positions(cfg, h.shape[0], h.shape[1])
+            out, aux = _layer_train(layer_p, cfg, h, pos,
+                                    tabs if use_tabs else None)
+            if with_grad:
+                return out, aux
+            return out
+
+        if with_grad:
+            def probe_grad(layer_p, h, *tabs):
+                def f(lp, hh):
+                    o, aux = _layer_train(
+                        lp, cfg, hh,
+                        _default_positions(cfg, hh.shape[0], hh.shape[1]),
+                        tabs if use_tabs else None)
+                    return jnp.sum(o.astype(jnp.float32)) + aux
+                return jax.grad(f, argnums=(0, 1))(layer_p, h)
+            fn = probe_grad
+        else:
+            fn = probe
+        in_sp = (layer_specs, P(dp, None, None))
+        args = (layer_shapes, h_spec)
+        if use_tabs:
+            in_sp += (P(dp, None, None), P(dp, None, None))
+            args += (tab_spec, tab_spec)
+        in_sp = sharding.fit_tree(in_sp, args, mesh)
+    else:  # decode
+        cache = jax.eval_shape(lambda: init_cache(cfg, batch, seq))
+        fields = lm._cache_layer_fields(cfg)
+        cache_layer = {f: jax.ShapeDtypeStruct(getattr(cache, f).shape[1:],
+                                               getattr(cache, f).dtype)
+                       for f in fields}
+        full_cache_sp = sharding.cache_specs(cfg, mesh)
+        cache_layer_sp = {f: P(*getattr(full_cache_sp, f)[1:]) for f in fields}
+        h1 = jax.ShapeDtypeStruct((batch, 1, cfg.d_model), cfg.dtype)
+
+        def fn(layer_p, h, cache_l):
+            out, new = _layer_decode(layer_p, cfg, h, cache_l,
+                                     jnp.asarray(seq - 1, jnp.int32))
+            return out, new
+
+        in_sp = (layer_specs, P(dp, None, None), cache_layer_sp)
+        args = (layer_shapes, h1, cache_layer)
+        in_sp = sharding.fit_tree(in_sp, args, mesh)
+
+    jfn = jax.jit(fn, in_shardings=sharding.to_shardings(in_sp, mesh))
+    return jfn, args, in_sp
+
+
+def build_embed_head_probe(cfg: lm.ArchConfig, mesh: Mesh, *, kind: str,
+                           seq: int, batch: int, mode: str = "fsdp_tp",
+                           with_grad: bool):
+    """Embedding + final norm + unembed (+ loss & grad for train) probe."""
+    sharding.register_zero3_constraints(cfg, mesh, mode)
+    dp = sharding.dp_axes(mesh)
+    full_p = sharding.param_specs(cfg, mesh, mode)
+    sub_keys = [k for k in ("embed", "unembed", "final_norm")
+                if k in jax.eval_shape(
+                    lambda: lm.init_params(jax.random.PRNGKey(0), cfg))]
+    shapes_all = jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    sub_shapes = {k: shapes_all[k] for k in sub_keys}
+    sub_specs = {k: full_p[k] for k in sub_keys}
+
+    s = seq if kind != "decode" else 1
+    if cfg.input_mode == "embeds":
+        inp = jax.ShapeDtypeStruct((batch, s, cfg.d_model), jnp.bfloat16)
+        inp_sp = P(dp, None, None)
+    else:
+        inp = jax.ShapeDtypeStruct((batch, s), jnp.int32)
+        inp_sp = P(dp, None)
+    lbl = jax.ShapeDtypeStruct((batch, s), jnp.int32)
+
+    import repro.models.layers as L
+
+    def head(p, inputs, labels):
+        p = lm._head_params(p)
+        h = lm._embed_in(p, cfg, inputs)
+        h = L.rmsnorm(p["final_norm"], h)
+        logits = L.linear(p["unembed"], h)
+        if kind == "train":
+            return jnp.mean(lm.sharded_ce(logits, labels))
+        return jnp.sum(logits.astype(jnp.float32))
+
+    fn = jax.grad(head) if (with_grad and kind == "train") else head
+    in_sp = (sub_specs, inp_sp, P(dp, None))
+    in_sp = sharding.fit_tree(in_sp, (sub_shapes, inp, lbl), mesh)
+    jfn = jax.jit(fn, in_shardings=sharding.to_shardings(in_sp, mesh))
+    return jfn, (sub_shapes, inp, lbl), in_sp

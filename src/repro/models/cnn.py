@@ -1,0 +1,257 @@
+"""CNN front-ends: the paper's student model (Fig. 5) and ResNet teacher.
+
+Pure-JAX functional style: params are pytrees, `init_*` builds them,
+`apply_*` runs them. NHWC layout.
+
+Student (Fig. 5): conv32(3x3, valid) -> BN -> maxpool2
+                  conv128(3x3, same) -> BN -> maxpool2
+                  conv256(3x3, same)
+                  conv16(3x3, same)   # feature-map reducer
+  32x32x1 -> 30 -> 15 -> 15 -> 7 -> 7x7x256 -> 7x7x16 = 784 features,
+  matching the paper's N_features = 784 (Eq. 14) exactly.
+  Head: either a dense softmax classifier (baseline) or the ACAM head.
+
+Teacher: CIFAR-style ResNet — 3 stages from `width` channels, basic blocks
+(two 3x3 convs + BN + ReLU, identity/1x1 shortcuts), global average pool,
+dense head (paper §IV-B).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def he_init(key: Array, shape: tuple[int, ...], fan_in: int) -> Array:
+    return jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)
+
+
+def conv_init(key: Array, kh: int, kw: int, cin: int, cout: int) -> dict:
+    return {
+        "w": he_init(key, (kh, kw, cin, cout), kh * kw * cin),
+        "b": jnp.zeros((cout,)),
+    }
+
+
+def conv2d(p: dict, x: Array, *, stride: int = 1, padding: str = "SAME") -> Array:
+    y = lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def bn_init(c: int) -> dict:
+    return {
+        "scale": jnp.ones((c,)),
+        "bias": jnp.zeros((c,)),
+        "mean": jnp.zeros((c,)),
+        "var": jnp.ones((c,)),
+    }
+
+
+def batchnorm(p: dict, x: Array, *, train: bool, momentum: float = 0.9):
+    """Returns (y, new_stats). In eval mode new_stats is p unchanged."""
+    if train:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new = dict(p)
+        new["mean"] = momentum * p["mean"] + (1 - momentum) * mu
+        new["var"] = momentum * p["var"] + (1 - momentum) * var
+    else:
+        mu, var, new = p["mean"], p["var"], p
+    inv = lax.rsqrt(var + 1e-5)
+    return (x - mu) * inv * p["scale"] + p["bias"], new
+
+
+def maxpool2(x: Array) -> Array:
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def dense_init(key: Array, din: int, dout: int) -> dict:
+    return {"w": he_init(key, (din, dout), din), "b": jnp.zeros((dout,))}
+
+
+def dense(p: dict, x: Array) -> Array:
+    return x @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# Student model (Fig. 5)
+# ---------------------------------------------------------------------------
+
+class StudentConfig(NamedTuple):
+    in_channels: int = 1  # greyscale per §IV-A
+    filters: tuple[int, int, int, int] = (32, 128, 256, 16)
+    num_classes: int = 10
+
+    @property
+    def num_features(self) -> int:
+        return 7 * 7 * self.filters[3]  # 784 at the paper's sizes
+
+
+def init_student(key: Array, cfg: StudentConfig = StudentConfig()) -> PyTree:
+    ks = jax.random.split(key, 5)
+    f1, f2, f3, f4 = cfg.filters
+    return {
+        "conv1": conv_init(ks[0], 3, 3, cfg.in_channels, f1),
+        "bn1": bn_init(f1),
+        "conv2": conv_init(ks[1], 3, 3, f1, f2),
+        "bn2": bn_init(f2),
+        "conv3": conv_init(ks[2], 3, 3, f2, f3),
+        "conv4": conv_init(ks[3], 3, 3, f3, f4),
+        "head": dense_init(ks[4], cfg.num_features, cfg.num_classes),
+    }
+
+
+def student_features(
+    params: PyTree, x: Array, *, train: bool = False, quantize: bool = False
+) -> tuple[Array, PyTree]:
+    """Front-end feature extractor -> (features (B, 784), new_bn_stats).
+
+    quantize=True runs weights through int8 fake-quant (QAT / deployment).
+    """
+    from repro.core.quant import fake_quant_tree
+
+    p = fake_quant_tree(params) if quantize else params
+    h = jax.nn.relu(conv2d(p["conv1"], x, padding="VALID"))  # 32 -> 30
+    h, bn1 = batchnorm(p["bn1"], h, train=train)
+    h = maxpool2(h)  # 15
+    h = jax.nn.relu(conv2d(p["conv2"], h))  # 15
+    h, bn2 = batchnorm(p["bn2"], h, train=train)
+    h = maxpool2(h)  # 7
+    h = jax.nn.relu(conv2d(p["conv3"], h))  # 7x7x256
+    h = jax.nn.relu(conv2d(p["conv4"], h))  # 7x7x16
+    feats = h.reshape(h.shape[0], -1)  # 784
+    new = dict(params)
+    if train:
+        new = dict(params, bn1=bn1, bn2=bn2)
+    return feats, new
+
+
+def student_logits(
+    params: PyTree, x: Array, *, train: bool = False, quantize: bool = False
+) -> tuple[Array, PyTree]:
+    feats, new = student_features(params, x, train=train, quantize=quantize)
+    return dense(params["head"], feats), new
+
+
+def student_macs(cfg: StudentConfig = StudentConfig()) -> dict[str, int]:
+    """Eq. 13 MAC counts per layer (+ the dense softmax head)."""
+    f1, f2, f3, f4 = cfg.filters
+    layers = {
+        "conv1": 30 * 30 * 3 * 3 * cfg.in_channels * f1,
+        "conv2": 15 * 15 * 3 * 3 * f1 * f2,
+        "conv3": 7 * 7 * 3 * 3 * f2 * f3,
+        "conv4": 7 * 7 * 3 * 3 * f3 * f4,
+        "head": cfg.num_features * cfg.num_classes + cfg.num_classes,
+    }
+    layers["total"] = sum(layers.values())
+    return layers
+
+
+def count_params(params: PyTree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Teacher model (CIFAR-style ResNet, §IV-B)
+# ---------------------------------------------------------------------------
+
+class TeacherConfig(NamedTuple):
+    in_channels: int = 3
+    width: int = 16  # stage-1 channels; stages double
+    blocks_per_stage: int = 3
+    num_classes: int = 10
+
+
+def _block_init(key: Array, cin: int, cout: int) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": conv_init(ks[0], 3, 3, cin, cout),
+        "bn1": bn_init(cout),
+        "conv2": conv_init(ks[1], 3, 3, cout, cout),
+        "bn2": bn_init(cout),
+    }
+    if cin != cout:
+        p["proj"] = conv_init(ks[2], 1, 1, cin, cout)
+    return p
+
+
+def init_teacher(key: Array, cfg: TeacherConfig = TeacherConfig()) -> PyTree:
+    ks = jax.random.split(key, 2 + 3 * cfg.blocks_per_stage)
+    params: dict = {"stem": conv_init(ks[0], 3, 3, cfg.in_channels, cfg.width),
+                    "bn_stem": bn_init(cfg.width)}
+    ki = 1
+    cin = cfg.width
+    for s in range(3):
+        cout = cfg.width * (2**s)
+        for b in range(cfg.blocks_per_stage):
+            params[f"s{s}b{b}"] = _block_init(ks[ki], cin, cout)
+            ki += 1
+            cin = cout
+    params["head"] = dense_init(ks[ki], cin, cfg.num_classes)
+    return params
+
+
+def _block_apply(p: dict, x: Array, *, stride: int, train: bool):
+    h = conv2d(p["conv1"], x, stride=stride)
+    h, bn1 = batchnorm(p["bn1"], h, train=train)
+    h = jax.nn.relu(h)
+    h = conv2d(p["conv2"], h)
+    h, bn2 = batchnorm(p["bn2"], h, train=train)
+    sc = x
+    if "proj" in p:
+        sc = conv2d(p["proj"], x, stride=stride)
+    elif stride != 1:
+        sc = x[:, ::stride, ::stride, :]
+    out = jax.nn.relu(h + sc)
+    new = dict(p, bn1=bn1, bn2=bn2) if train else p
+    return out, new
+
+
+def teacher_logits(
+    params: PyTree, x: Array, cfg: TeacherConfig = TeacherConfig(), *, train: bool = False
+) -> tuple[Array, PyTree]:
+    new = dict(params)
+    h = conv2d(params["stem"], x)
+    h, new["bn_stem"] = batchnorm(params["bn_stem"], h, train=train)
+    h = jax.nn.relu(h)
+    for s in range(3):
+        for b in range(cfg.blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            h, new[f"s{s}b{b}"] = _block_apply(
+                params[f"s{s}b{b}"], h, stride=stride, train=train
+            )
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    return dense(params["head"], h), (new if train else params)
+
+
+def teacher_macs(cfg: TeacherConfig = TeacherConfig()) -> int:
+    """Analytic MAC count for the teacher at 32x32 input."""
+    total = 32 * 32 * 9 * cfg.in_channels * cfg.width
+    hw, cin = 32, cfg.width
+    for s in range(3):
+        cout = cfg.width * (2**s)
+        for b in range(cfg.blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            hw_out = hw // stride
+            total += hw_out * hw_out * 9 * cin * cout  # conv1
+            total += hw_out * hw_out * 9 * cout * cout  # conv2
+            if cin != cout:
+                total += hw_out * hw_out * cin * cout  # proj
+            hw, cin = hw_out, cout
+    total += cin * cfg.num_classes
+    return total

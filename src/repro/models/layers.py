@@ -1,0 +1,615 @@
+"""Shared neural layers for the LM zoo — pure functional JAX.
+
+Covers every feature the 10 assigned architectures need:
+  - RMSNorm / LayerNorm, per-head qk-norm (qwen3)
+  - RoPE (standard) and M-RoPE (qwen2-vl 3-section rotary)
+  - GQA attention with optional QKV bias, chunked (flash-style, O(S) memory)
+    softmax so 32k prefill lowers without (B,H,S,S) temporaries
+  - sliding-window masking (hymba long-context)
+  - SwiGLU MLP
+  - MoE with sort-based capacity dispatch (top-k, optional shared expert,
+    softmax or sigmoid router, load-balance aux loss) — scales to 256 experts
+  - MLA (deepseek multi-head latent attention), train (expanded) and decode
+    (weight-absorbed, compressed cache) paths
+  - Mamba2 SSD (chunked state-space duality scan) + single-step decode
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"].astype(x.dtype)
+
+
+def layernorm_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: dict, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope_tables(positions: Array, head_dim: int, theta: float) -> tuple[Array, Array]:
+    """Precompute (cos, sin) of shape (B, S, D/2) once per step so the layer
+    scan does not rebuild them per layer (a §Perf hillclimb: per-layer table
+    construction showed up as collective-permutes + f32 gathers in the HLO)."""
+    freqs = rope_freqs(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0,
+               tables: tuple[Array, Array] | None = None) -> Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    if tables is None:
+        tables = rope_tables(positions, d, theta)
+    cos = tables[0][:, :, None, :]
+    sin = tables[1][:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: Array, positions: Array, theta: float, sections: tuple[int, int, int]
+) -> Array:
+    """M-RoPE (qwen2-vl): positions (3, B, S) = (temporal, height, width);
+    the D/2 frequency slots are split into 3 sections, each driven by its
+    own position stream. sections sums to D/2."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    # section id per frequency slot
+    sec = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )  # (D/2,)
+    # gather per-slot positions: (B, S, D/2)
+    pos_bsd = jnp.moveaxis(positions, 0, -1).astype(jnp.float32)  # (B, S, 3)
+    slot_pos = jnp.take(pos_bsd, sec, axis=-1)  # (B, S, D/2)
+    angles = slot_pos * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / attention
+# ---------------------------------------------------------------------------
+
+def linear_init(key: Array, din: int, dout: int, *, bias: bool = False,
+                dtype=jnp.bfloat16) -> dict:
+    p = {"w": (jax.random.normal(key, (din, dout)) * (din ** -0.5)).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    return p
+
+
+def linear(p: dict, x: Array) -> Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def chunked_attention(
+    q: Array, k: Array, v: Array, *, causal: bool, q_chunk: int = 512,
+    window: int | None = None, q_offset: Array | int = 0,
+) -> Array:
+    """Flash-style attention with O(S_q/chunk) temporaries (pure jnp).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H = KV * G. GQA kv-heads are
+    expanded (repeated) to full heads so the head axis shards cleanly over
+    the TP mesh axis even when KV < mesh "model" size — the activation-side
+    analogue of "replicate KV heads across TP groups". Each q-chunk attends
+    to all of k under the mask; `jax.checkpoint` on the chunk body keeps the
+    (B, H, q_chunk, Sk) logits out of saved residuals (so the lax.map
+    backward recomputes them chunk-by-chunk instead of stacking all chunks).
+
+    `window` adds sliding-window masking; q_offset positions q within the kv
+    stream. On real TPU the Pallas flash kernel
+    (repro.kernels.flash_attention) replaces this XLA fallback.
+    """
+    from repro.distributed import context as mesh_ctx
+
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    dv = v.shape[-1]  # may differ from d (MLA: qk-dim 192, v-dim 128)
+    g = h // kv
+    scale = d ** -0.5
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = mesh_ctx.constrain(q, "dp", None, "model", None)
+    k = mesh_ctx.constrain(k, "dp", None, "model", None)
+    v = mesh_ctx.constrain(v, "dp", None, "model", None)
+    nq = -(-sq // q_chunk)
+    pad = nq * q_chunk - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = jnp.moveaxis(q.reshape(b, nq, q_chunk, h, d), 1, 0)
+
+    kpos = jnp.arange(sk)
+
+    def one_chunk(ci, qi):
+        # qi: (b, q_chunk, h, d). bf16 operands + f32 accumulation
+        # (preferred_element_type) = MXU semantics, no materialised f32
+        # operand copies.
+        logits = jnp.einsum("bqhd,bshd->bhqs", qi, k,
+                            preferred_element_type=jnp.float32) * scale
+        qpos = q_offset + ci * q_chunk + jnp.arange(q_chunk)
+        mask = jnp.ones((q_chunk, sk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+        att = jax.nn.softmax(logits, axis=-1)
+        # fully-masked rows (padding) produce nan-free zeros:
+        att = jnp.where(jnp.any(mask, axis=-1)[None, None, :, None], att, 0.0)
+        out = jnp.einsum("bhqs,bshd->bqhd", att.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.astype(v.dtype)
+
+    if nq == 1:
+        # single chunk: no loop — also the path used by the dry-run layer
+        # probes (q_chunk=seq) so XLA cost analysis sees the attention FLOPs
+        # outside any while body.
+        out = one_chunk(0, qc[0])[None]
+    else:
+        body = jax.checkpoint(lambda args: one_chunk(*args))
+        out = lax.map(body, (jnp.arange(nq), qc))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nq * q_chunk, h, dv)
+    return out[:, :sq]
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cur_len: Array) -> Array:
+    """Single-token attention against a (B, Smax, KV, D) cache.
+
+    q: (B, 1, H, D); cur_len: scalar int32 — only slots < cur_len attended
+    (ring-buffer callers pass the buffer fill level).
+    """
+    b, _, h, d = q.shape
+    _, smax, kv, _ = k_cache.shape
+    g = h // kv
+    qr = q.reshape(b, kv, g, d)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    mask = jnp.arange(smax) < cur_len  # (smax,)
+    logits = jnp.where(mask[None, None, None, :], logits, -jnp.inf)
+    att = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", att.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: Array, d: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(k1, d, d_ff, dtype=dtype),
+        "up": linear_init(k2, d, d_ff, dtype=dtype),
+        "down": linear_init(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def mlp(p: dict, x: Array) -> Array:
+    return linear(p["down"], jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — sort-based capacity dispatch
+# ---------------------------------------------------------------------------
+
+def moe_init(
+    key: Array, d: int, d_ff_expert: int, n_experts: int, n_shared: int,
+    d_ff_shared: int, dtype=jnp.bfloat16,
+) -> dict:
+    ks = jax.random.split(key, 5)
+    scale_in = d ** -0.5
+    scale_out = d_ff_expert ** -0.5
+    p = {
+        "router": {"w": (jax.random.normal(ks[0], (d, n_experts)) * scale_in
+                          ).astype(jnp.float32)},
+        "gate": (jax.random.normal(ks[1], (n_experts, d, d_ff_expert)) * scale_in).astype(dtype),
+        "up": (jax.random.normal(ks[2], (n_experts, d, d_ff_expert)) * scale_in).astype(dtype),
+        "down": (jax.random.normal(ks[3], (n_experts, d_ff_expert, d)) * scale_out).astype(dtype),
+    }
+    if n_shared > 0:
+        p["shared"] = mlp_init(ks[4], d, d_ff_shared * n_shared, dtype=dtype)
+    return p
+
+
+def moe(
+    p: dict, x: Array, *, top_k: int, router_type: str = "softmax",
+    capacity_factor: float = 1.25, aux_coeff: float = 0.01,
+) -> tuple[Array, Array]:
+    """MoE layer. x: (B, S, d) -> (y, aux_loss).
+
+    Dispatch: flatten tokens, top-k route, sort (token,k) slots by expert id,
+    pack into a static (E, C, d) capacity buffer, batched per-expert matmuls,
+    weighted scatter back. Slots beyond capacity are dropped (standard
+    capacity-factor semantics). FLOPs = T*K*d*d_ff*3*2 — no all-expert
+    overcompute; memory = O(E*C*d) — no (B,S,E,C) one-hot.
+    """
+    b, s, d = x.shape
+    e = p["gate"].shape[0]
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)  # (T, E)
+    if router_type == "softmax":
+        scores = jax.nn.softmax(logits, axis=-1)
+        w, ids = lax.top_k(scores, top_k)  # (T, K)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    elif router_type == "sigmoid":  # deepseek-v3 style
+        scores = jax.nn.sigmoid(logits)
+        w, ids = lax.top_k(scores, top_k)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    else:
+        raise ValueError(router_type)
+
+    # load-balance aux loss (fraction-dispatched x mean-router-prob)
+    probs = jax.nn.softmax(logits, axis=-1)
+    dispatch_frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(ids, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = aux_coeff * e * jnp.sum(dispatch_frac * jnp.mean(probs, axis=0))
+
+    # ---- sort-based dispatch ----
+    # small token counts (decode steps, smoke tests): capacity = t makes
+    # dropping impossible (a token contributes each expert at most once), so
+    # serving is exact. At training scale the usual capacity-factor applies.
+    if t <= 4096:
+        cap = t
+    else:
+        cap = max(int(-(-t * top_k // e) * capacity_factor), top_k)
+    flat_ids = ids.reshape(-1)  # (T*K,)
+    sort_idx = jnp.argsort(flat_ids)  # stable
+    sorted_ids = flat_ids[sort_idx]
+    seg_start = jnp.searchsorted(sorted_ids, jnp.arange(e))  # (E,)
+    pos_in_seg = jnp.arange(t * top_k) - seg_start[sorted_ids]
+    keep = pos_in_seg < cap
+    token_of_slot = sort_idx // top_k  # (T*K,) source token per sorted slot
+
+    # pack tokens -> (E, C, d); keep the buffer sharded E->model (expert
+    # parallelism), C->data under a mesh (repro.distributed.context)
+    from repro.distributed import context as mesh_ctx
+
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[sorted_ids, jnp.where(keep, pos_in_seg, cap - 1)].add(
+        jnp.where(keep[:, None], xf[token_of_slot], 0).astype(x.dtype),
+        mode="drop",
+    )
+    buf = mesh_ctx.constrain(buf, "model", "dp", None)
+
+    # batched expert FFN: (E, C, d) x (E, d, f)
+    h_gate = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
+    h_up = jnp.einsum("ecd,edf->ecf", buf, p["up"])
+    h = jax.nn.silu(h_gate) * h_up
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["down"])  # (E, C, d)
+    out_buf = mesh_ctx.constrain(out_buf, "model", "dp", None)
+
+    # weighted scatter back to tokens
+    flat_w = w.reshape(-1)[sort_idx]  # (T*K,) aligned with slots
+    gathered = out_buf[sorted_ids, jnp.clip(pos_in_seg, 0, cap - 1)]  # (T*K, d)
+    contrib = jnp.where(keep[:, None], gathered * flat_w[:, None].astype(x.dtype), 0)
+    y = jnp.zeros((t, d), x.dtype).at[token_of_slot].add(contrib)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], xf)
+    return y.reshape(b, s, d), aux
+
+
+def moe_shardmap(
+    p: dict, x: Array, *, top_k: int, router_type: str = "softmax",
+    capacity_factor: float = 1.25, aux_coeff: float = 0.01,
+) -> tuple[Array, Array]:
+    """Expert-parallel MoE with manual collectives (jax.shard_map).
+
+    §Perf hillclimb for the MoE cells: the auto-GSPMD path lowers the
+    capacity-buffer scatter-adds as replicated-compute + full-buffer
+    all-reduce (measured 725 GB/layer on deepseek-v3 train_4k). Here the key
+    observation is that under tensor parallelism the activations are already
+    replicated across the "model" axis, so *dispatch needs no communication
+    at all*: every model-rank routes and packs the same (dp-local) tokens,
+    computes only its own experts' slice, and the combine is one bf16 psum
+    of (T_local, d) over the model axis (~0.9 GB/layer at deepseek scale —
+    a ~300x cut). Router + shared expert + aux loss stay in auto-GSPMD land
+    (small, and keeps their gradients trivially correct).
+    """
+    from repro.distributed import context as mesh_ctx
+
+    ax = mesh_ctx.get()
+    mesh = mesh_ctx.get_mesh()
+    if ax is None or mesh is None:
+        return moe(p, x, top_k=top_k, router_type=router_type,
+                   capacity_factor=capacity_factor, aux_coeff=aux_coeff)
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    e = p["gate"].shape[0]
+    t = b * s
+    xf = x.reshape(t, d)
+
+    # --- routing (auto land, replicated router weights) ---
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    if router_type == "softmax":
+        scores = jax.nn.softmax(logits, axis=-1)
+    elif router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        raise ValueError(router_type)
+    w, ids = lax.top_k(scores, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    dispatch_frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(ids, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = aux_coeff * e * jnp.sum(dispatch_frac * jnp.mean(probs, axis=0))
+
+    # --- static geometry ---
+    dp_axes = ax.dp if isinstance(ax.dp, tuple) else (ax.dp,)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    mp_size = mesh.shape[ax.model]
+    e_loc = e // mp_size
+    t_loc = max(t // dp_size, 1)
+    if t_loc <= 4096:
+        cap = t_loc  # exact small-batch semantics (see moe())
+    else:
+        cap = max(int(-(-t_loc * top_k // e) * capacity_factor), top_k)
+
+    def block(x_blk, ids_blk, w_blk, gate, up, down):
+        # x_blk (t_loc, d); ids/w (t_loc, K); gate/up (e_loc, d, f)
+        j = lax.axis_index(ax.model)
+        flat_ids = ids_blk.reshape(-1)
+        sort_idx = jnp.argsort(flat_ids)
+        sorted_ids = flat_ids[sort_idx]
+        seg_start = jnp.searchsorted(sorted_ids, jnp.arange(e))
+        pos = jnp.arange(sorted_ids.shape[0]) - seg_start[sorted_ids]
+        local = (sorted_ids >= j * e_loc) & (sorted_ids < (j + 1) * e_loc)
+        keep = local & (pos < cap)
+        tok = sort_idx // top_k
+        le = jnp.where(local, sorted_ids - j * e_loc, 0)
+
+        buf = jnp.zeros((e_loc, cap, x_blk.shape[-1]), x_blk.dtype)
+        buf = buf.at[le, jnp.where(keep, pos, cap - 1)].add(
+            jnp.where(keep[:, None], x_blk[tok], 0).astype(x_blk.dtype),
+            mode="drop")
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, gate)) * jnp.einsum(
+            "ecd,edf->ecf", buf, up)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, down)
+
+        fw = w_blk.reshape(-1)[sort_idx]
+        gathered = out_buf[le, jnp.clip(pos, 0, cap - 1)]
+        contrib = jnp.where(keep[:, None],
+                            gathered * fw[:, None].astype(x_blk.dtype), 0)
+        y_loc = jnp.zeros_like(x_blk).at[tok].add(contrib)
+        return lax.psum(y_loc, ax.model)
+
+    dp = ax.dp
+    y = jax.shard_map(
+        block, mesh=mesh,
+        in_specs=(P(dp, None), P(dp, None), P(dp, None),
+                  P(ax.model, None, None), P(ax.model, None, None),
+                  P(ax.model, None, None)),
+        out_specs=P(dp, None),
+    )(xf, ids, w, p["gate"], p["up"], p["down"])
+
+    y = y.reshape(b, s, d)
+    if "shared" in p:
+        y = y + mlp(p["shared"], x)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality, chunked)
+# ---------------------------------------------------------------------------
+
+class SSMSpec(NamedTuple):
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int
+    conv_kernel: int = 4
+    chunk: int = 256
+
+
+def ssd_init(key: Array, d: int, spec: SSMSpec, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    din, h = spec.d_inner, spec.n_heads
+    # in_proj -> [z, x, B, C, dt]
+    d_proj = 2 * din + 2 * spec.d_state + h
+    return {
+        "in_proj": linear_init(ks[0], d, d_proj, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (spec.conv_kernel,
+                    din + 2 * spec.d_state)) * 0.1).astype(dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "out_norm": rmsnorm_init(din),
+        "out_proj": linear_init(ks[3], din, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, state: Array | None = None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). Returns (y, new_state)
+    where state carries the trailing K-1 inputs for decode."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(x[:, :0])
+    return y, new_state
+
+
+def _segsum(a: Array) -> Array:
+    """Stable 'segment sum': out[..., i, j] = sum_{k=j+1..i} a[..., k],
+    -inf for j > i. a: (..., L)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{j+1..i} when i>=j
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(
+    xh: Array, dt: Array, A: Array, Bm: Array, Cm: Array, spec: SSMSpec,
+    init_state: Array | None = None,
+) -> tuple[Array, Array]:
+    """Chunked SSD (Mamba2 alg. 1 dual form).
+
+    xh: (B, S, H, P) head inputs; dt: (B, S, H) positive step sizes;
+    A: (H,) negative decay rates; Bm, Cm: (B, S, N) (single group).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    L = spec.chunk
+    nc = -(-s // L)
+    pad = nc * L - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    # chunked views
+    xc = xh.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    Bc = Bm.reshape(b, nc, L, n)
+    Cc = Cm.reshape(b, nc, L, n)
+
+    a = (dtc * A[None, None, None, :]).astype(jnp.float32)  # (b,nc,L,h) negative
+    a_hp = jnp.moveaxis(a, -1, -2)  # (b, nc, h, L)
+    a_cum = jnp.cumsum(a_hp, axis=-1)
+
+    xdt = xc * dtc[..., None]  # weight inputs by dt
+
+    # 1) intra-chunk (diagonal) term. bf16 operands + f32 accumulation:
+    # the decay/score matrices stay f32 (exp output), the big tensors feed
+    # the MXU in bf16 (§Perf cell D).
+    Lmat = jnp.exp(_segsum(a_hp))  # (b,nc,h,L,L)
+    Lmat = jnp.where(jnp.isfinite(Lmat), Lmat, 0.0)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc,
+                        preferred_element_type=jnp.float32)  # (b,nc,L,L)
+    xdt_b = xdt.astype(xh.dtype)
+    y_diag = jnp.einsum("bchlm,bclm,bcmhp->bclhp",
+                        Lmat.astype(xh.dtype), scores.astype(xh.dtype),
+                        xdt_b, preferred_element_type=jnp.float32)
+
+    # 2) chunk states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (b,nc,h,L)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn",
+                        Bc.astype(xh.dtype), decay_states.astype(xh.dtype),
+                        xdt_b, preferred_element_type=jnp.float32)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (b,nc,h)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    states_t = jnp.moveaxis(states, 1, 0)  # (nc,b,h,p,n)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,b,h)
+    final, prev_states = lax.scan(scan_fn, s0, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,h,p,n)
+
+    # 4) inter-chunk output
+    state_decay_out = jnp.exp(a_cum)  # (b,nc,h,L)
+    y_off = jnp.einsum("bcln,bchl,bchpn->bclhp",
+                       Cc.astype(xh.dtype), state_decay_out.astype(xh.dtype),
+                       prev_states.astype(xh.dtype),
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, nc * L, h, p)[:, :s]
+    return y.astype(xh.dtype), final
+
+
+def ssd_step(
+    xh: Array, dt: Array, A: Array, Bm: Array, Cm: Array, state: Array,
+) -> tuple[Array, Array]:
+    """Single-token SSM update (decode path — O(1), no chunking).
+
+    xh: (B, 1, H, P); dt: (B, 1, H); Bm, Cm: (B, 1, N); state: (B, H, P, N).
+        state' = state * exp(A*dt) + (dt*x) outer B;  y = <state', C>
+    """
+    a = jnp.exp(dt[:, 0, :, None, None].astype(jnp.float32)
+                * A[None, :, None, None])  # (B,H,1,1)
+    xdt = (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)  # (B,H,P)
+    upd = jnp.einsum("bhp,bn->bhpn", xdt, Bm[:, 0].astype(jnp.float32))
+    new_state = state.astype(jnp.float32) * a + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm[:, 0].astype(jnp.float32))
+    return y[:, None].astype(xh.dtype), new_state
+
+
+def ssd_block(p: dict, x: Array, spec: SSMSpec, *, state: PyTree | None = None,
+              ) -> tuple[Array, PyTree]:
+    """Full Mamba2 block. x: (B, S, d). state: None (train/prefill from zero)
+    or {"conv": (B,K-1,C), "ssm": (B,H,P,N)} for decode/continuation.
+    Returns (y (B,S,d), new_state)."""
+    din, h, pd, n = spec.d_inner, spec.n_heads, spec.head_dim, spec.d_state
+    proj = linear(p["in_proj"], x)
+    z, xin, Bm, Cm, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = jnp.split(conv_out, [din, din + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    xh = xin.reshape(*xin.shape[:-1], h, pd)
+    init = None if state is None else state["ssm"]
+    if x.shape[1] == 1 and state is not None:
+        y, final = ssd_step(xh, dt, A, Bm, Cm, init)
+    else:
+        y, final = ssd_scan(xh, dt, A, Bm, Cm, spec, init_state=init)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:-1], din)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y)
+    return out, {"conv": new_conv, "ssm": final}

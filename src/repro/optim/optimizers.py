@@ -1,0 +1,116 @@
+"""Pure-JAX optimisers (no optax in the container): AdamW, SGD+momentum,
+LR schedules, global-norm clipping. Optimiser states are pytrees mirroring
+the params, so they shard/checkpoint with the same rules.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: Array
+    mu: PyTree  # first moment / momentum
+    nu: PyTree | None  # second moment (None for SGD)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], tuple[PyTree, OptState]]
+
+
+def _zeros_like_f32(p: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+
+
+def adamw(
+    lr: float | Callable[[Array], Array],
+    *,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), _zeros_like_f32(params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p.ndim >= 2:  # decay weights, not bias/norm
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, OptState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float | Callable[[Array], Array], *, momentum: float = 0.9,
+        nesterov: bool = False, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params), None)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+
+        def add_wd(g, p):
+            g = g.astype(jnp.float32)
+            return g + weight_decay * p.astype(jnp.float32) if (weight_decay and p.ndim >= 2) else g
+
+        g_wd = jax.tree_util.tree_map(add_wd, grads, params)
+        mu = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state.mu, g_wd)
+        upd_src = (
+            jax.tree_util.tree_map(lambda g, m: g + momentum * m, g_wd, mu)
+            if nesterov else mu
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), params, upd_src
+        )
+        return new_params, OptState(step, mu, None)
+
+    return Optimizer(init, update)
+
+
+# --- schedules ---
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0,
+                    final_frac: float = 0.0) -> Callable[[Array], Array]:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = base_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm

@@ -1,0 +1,230 @@
+"""Trainer for the paper's CNN pipeline: baseline CE, KD (+curriculum),
+iterative pruning, and QAT — composable stages matching paper §II.
+
+This is the *paper-scale* trainer (single device, small models). The LM-scale
+distributed trainer lives in `repro.launch.train` / `repro.distributed`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distill, prune
+from repro.data import pipeline
+from repro.models import cnn
+from repro.optim import optimizers as optim
+
+Array = jax.Array
+PyTree = Any
+
+
+class TrainConfig(NamedTuple):
+    epochs: int = 5
+    batch_size: int = 128
+    lr: float = 1e-3
+    weight_decay: float = 1e-4
+    # distillation
+    distill_alpha: float = 0.5
+    distill_temperature: float = 4.0
+    curriculum: bool = True
+    curriculum_start_frac: float = 0.4
+    # pruning
+    prune_start_sparsity: float = 0.50
+    prune_final_sparsity: float = 0.80
+    prune_epochs: int = 3  # pruning ramp epochs (then final fine-tune)
+    finetune_epochs: int = 2
+    # quantisation
+    qat: bool = False
+    seed: int = 0
+
+
+def merge_bn_stats(params, new_params):
+    """Recursively copy updated BN running stats (mean/var) from the train
+    pass back into the param tree (BN dicts may be nested inside blocks)."""
+    if not isinstance(params, dict):
+        return params
+    out = {}
+    for k, v in params.items():
+        if isinstance(v, dict) and "mean" in v and "var" in v:
+            out[k] = {**v, "mean": new_params[k]["mean"],
+                      "var": new_params[k]["var"]}
+        elif isinstance(v, dict):
+            out[k] = merge_bn_stats(v, new_params[k])
+        else:
+            out[k] = v
+    return out
+
+
+def _make_step(loss_fn, optimizer, masks=None):
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, *batch)
+        if masks is not None:
+            grads = prune.mask_gradients(grads, masks)
+        grads, _ = optim.clip_by_global_norm(grads, 1.0)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        if masks is not None:
+            params = prune.apply_masks(params, masks)
+        # fold updated BN running stats back in (recursive: teacher blocks)
+        params = merge_bn_stats(params, aux)
+        return params, opt_state, loss
+
+    return step
+
+
+def _bn_stats(new_params):
+    return new_params
+
+
+def train_teacher(
+    images: np.ndarray, labels: np.ndarray, cfg: cnn.TeacherConfig,
+    *, epochs: int = 5, batch_size: int = 128, lr: float = 1e-3, seed: int = 0,
+) -> PyTree:
+    params = cnn.init_teacher(jax.random.PRNGKey(seed), cfg)
+    opt = optim.adamw(lr, weight_decay=1e-4)
+    opt_state = opt.init(params)
+
+    def loss_fn(p, x, y):
+        logits, newp = cnn.teacher_logits(p, x, cfg, train=True)
+        return distill.cross_entropy(logits, y), _bn_stats(newp)
+
+    step = _make_step(loss_fn, opt)
+    for epoch in range(epochs):
+        for batch in pipeline.batches(images, labels, batch_size, seed=seed, epoch=epoch):
+            params, opt_state, loss = step(params, opt_state, batch)
+    return params
+
+
+def evaluate(logits_fn, params, images, labels, *, batch_size: int = 512) -> float:
+    fn = jax.jit(lambda p, x: jnp.argmax(logits_fn(p, x)[0], axis=-1))
+    correct = 0
+    for i in range(0, len(labels), batch_size):
+        pred = fn(params, images[i : i + batch_size])
+        correct += int(jnp.sum(pred == labels[i : i + batch_size]))
+    return correct / len(labels)
+
+
+def metrics(logits_fn, params, images, labels, num_classes: int = 10,
+            *, batch_size: int = 512) -> dict[str, float]:
+    """Accuracy / macro F1 / precision / recall (Table I columns)."""
+    preds = []
+    fn = jax.jit(lambda p, x: jnp.argmax(logits_fn(p, x)[0], axis=-1))
+    for i in range(0, len(labels), batch_size):
+        preds.append(np.asarray(fn(params, images[i : i + batch_size])))
+    pred = np.concatenate(preds)
+    y = np.asarray(labels)
+    acc = float((pred == y).mean())
+    precs, recs, f1s = [], [], []
+    for c in range(num_classes):
+        tp = float(((pred == c) & (y == c)).sum())
+        fp = float(((pred == c) & (y != c)).sum())
+        fn_ = float(((pred != c) & (y == c)).sum())
+        p_ = tp / (tp + fp) if tp + fp else 0.0
+        r_ = tp / (tp + fn_) if tp + fn_ else 0.0
+        precs.append(p_); recs.append(r_)
+        f1s.append(2 * p_ * r_ / (p_ + r_) if p_ + r_ else 0.0)
+    return {"accuracy": acc, "f1": float(np.mean(f1s)),
+            "precision": float(np.mean(precs)), "recall": float(np.mean(recs))}
+
+
+def train_student(
+    images: np.ndarray, labels: np.ndarray,
+    *, student_cfg: cnn.StudentConfig = cnn.StudentConfig(),
+    teacher_logits_all: np.ndarray | None = None,
+    cfg: TrainConfig = TrainConfig(),
+    do_prune: bool = False,
+) -> tuple[PyTree, PyTree | None]:
+    """Train the student; returns (params, masks|None).
+
+    teacher_logits_all: precomputed teacher logits for the full train set
+    (enables KD + curriculum without holding the teacher in memory).
+    """
+    params = cnn.init_student(jax.random.PRNGKey(cfg.seed), student_cfg)
+    opt = optim.adamw(cfg.lr, weight_decay=cfg.weight_decay)
+    opt_state = opt.init(params)
+    use_kd = teacher_logits_all is not None
+
+    if use_kd:
+        def loss_fn(p, x, y, zt):
+            logits, newp = cnn.student_logits(p, x, train=True, quantize=cfg.qat)
+            loss = distill.distillation_loss(
+                logits, zt, y, alpha=cfg.distill_alpha,
+                temperature=cfg.distill_temperature)
+            return loss, _bn_stats(newp)
+    else:
+        def loss_fn(p, x, y):
+            logits, newp = cnn.student_logits(p, x, train=True, quantize=cfg.qat)
+            return distill.cross_entropy(logits, y), _bn_stats(newp)
+
+    # curriculum ordering (Eq. 4) from teacher logits
+    order = None
+    if use_kd and cfg.curriculum:
+        order = np.asarray(distill.curriculum_order(
+            jnp.asarray(teacher_logits_all), jnp.asarray(labels)))
+    pacing = distill.CurriculumSchedule(cfg.curriculum_start_frac, max(cfg.epochs - 1, 1))
+
+    masks = None
+
+    def run_epochs(n_epochs, params, opt_state, masks, epoch0=0):
+        stp = _make_step(loss_fn, opt, masks)
+        for e in range(n_epochs):
+            epoch = epoch0 + e
+            for xb, yb in pipeline.batches(
+                images, labels, cfg.batch_size, seed=cfg.seed, epoch=epoch,
+            ):
+                params, opt_state, _ = stp(params, opt_state, (xb, yb))
+        return params, opt_state
+
+    # For KD, teacher logits must stay index-aligned per batch, so the KD loop
+    # iterates indices directly (also what curriculum pacing needs).
+    if use_kd:
+        zt_all = np.asarray(teacher_logits_all)
+        n = len(labels)
+        idx_order = order if order is not None else np.arange(n)
+
+        def kd_epochs(n_epochs, params, opt_state, masks, epoch0=0):
+            stp = _make_step(loss_fn, opt, masks)
+            for e in range(n_epochs):
+                epoch = epoch0 + e
+                limit = pacing.available(epoch, n) if cfg.curriculum else n
+                pool = idx_order[:limit]
+                rng = np.random.RandomState((cfg.seed * 9973 + epoch) & 0x7FFFFFFF)
+                perm = rng.permutation(pool)
+                stop = (len(perm) // cfg.batch_size) * cfg.batch_size
+                for i in range(0, stop, cfg.batch_size):
+                    sel = perm[i : i + cfg.batch_size]
+                    params, opt_state, _ = stp(
+                        params, opt_state, (images[sel], labels[sel], zt_all[sel]))
+            return params, opt_state
+
+        params, opt_state = kd_epochs(cfg.epochs, params, opt_state, None)
+        if do_prune:
+            for t in range(cfg.prune_epochs):
+                s_t = float(prune.polynomial_sparsity(
+                    t + 1, cfg.prune_epochs, cfg.prune_start_sparsity,
+                    cfg.prune_final_sparsity))
+                params, masks = prune.prune_tree(params, s_t)
+                params, opt_state = kd_epochs(1, params, opt_state, masks,
+                                              epoch0=cfg.epochs + t)
+            params, opt_state = kd_epochs(
+                cfg.finetune_epochs, params, opt_state, masks,
+                epoch0=cfg.epochs + cfg.prune_epochs)
+    else:
+        params, opt_state = run_epochs(cfg.epochs, params, opt_state, None)
+        if do_prune:
+            for t in range(cfg.prune_epochs):
+                s_t = float(prune.polynomial_sparsity(
+                    t + 1, cfg.prune_epochs, cfg.prune_start_sparsity,
+                    cfg.prune_final_sparsity))
+                params, masks = prune.prune_tree(params, s_t)
+                params, opt_state = run_epochs(1, params, opt_state, masks,
+                                               epoch0=cfg.epochs + t)
+            params, opt_state = run_epochs(
+                cfg.finetune_epochs, params, opt_state, masks,
+                epoch0=cfg.epochs + cfg.prune_epochs)
+
+    return params, masks

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the single host CPU device (the multi-device dry-run tests
+# spawn subprocesses that set XLA_FLAGS before importing jax).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,184 @@
+"""Per-architecture smoke tests (reduced configs, one fwd/train step on CPU,
+shape + finiteness assertions) plus serving-consistency checks."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import lm
+
+ARCHS = configs.list_archs()
+
+
+def _batch(cfg, key, b=2, s=32):
+    if cfg.input_mode == "tokens":
+        inputs = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    else:
+        inputs = jax.random.normal(key, (b, s, cfg.d_model), jnp.bfloat16)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0, cfg.vocab)
+    out = {"inputs": inputs, "labels": labels}
+    if cfg.rope == "mrope":
+        out["positions"] = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, None], (3, b, s))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = configs.get(arch, smoke=True)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        batch = _batch(cfg, jax.random.PRNGKey(1))
+        logits, aux = jax.jit(
+            lambda p, b: lm.forward(p, cfg, b["inputs"], b.get("positions"))
+        )(params, batch)
+        assert logits.shape == (2, 32, cfg.vocab)
+        assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+        assert not bool(jnp.isnan(aux))
+
+    def test_train_step_decreases_loss(self, arch):
+        """One SGD step on a repeated batch must reduce the loss."""
+        cfg = configs.get(arch, smoke=True)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        batch = _batch(cfg, jax.random.PRNGKey(2))
+        loss_fn = jax.jit(lambda p: lm.loss_fn(p, cfg, batch))
+        l0 = loss_fn(params)
+        g = jax.jit(jax.grad(lambda p: lm.loss_fn(p, cfg, batch)))(params)
+        params2 = jax.tree_util.tree_map(
+            lambda p, gg: (p.astype(jnp.float32) - 0.3 * gg.astype(jnp.float32)
+                           ).astype(p.dtype), params, g)
+        l1 = loss_fn(params2)
+        assert float(l1) < float(l0)
+        assert jnp.isfinite(l0) and jnp.isfinite(l1)
+
+    def test_full_config_registered(self, arch):
+        cfg = configs.get(arch)
+        assert cfg.n_layers >= 22 and cfg.vocab >= 504
+        assert cfg.param_count() > 1e9  # full configs are billion-scale
+
+
+class TestParamCounts:
+    """Full configs land near their advertised sizes."""
+
+    @pytest.mark.parametrize("arch,lo,hi", [
+        ("qwen2.5-14b", 13e9, 16e9),
+        ("tinyllama-1.1b", 1.0e9, 1.25e9),
+        ("qwen3-1.7b", 1.5e9, 2.2e9),
+        # 35.2B is what the brief's exact config yields (64L x d5120 x ff27392)
+        ("qwen1.5-32b", 30e9, 36e9),
+        ("phi3.5-moe-42b-a6.6b", 39e9, 45e9),
+        # +33B over nominal: homogeneous 61-layer MoE scan vs 58 MoE + 3
+        # dense layers (documented deviation, DESIGN.md §6)
+        ("deepseek-v3-671b", 620e9, 710e9),
+        ("qwen2-vl-72b", 66e9, 76e9),
+        ("hymba-1.5b", 1.2e9, 1.9e9),
+        ("hubert-xlarge", 0.9e9, 1.3e9),
+        ("mamba2-2.7b", 2.4e9, 3.0e9),
+    ])
+    def test_param_count_band(self, arch, lo, hi):
+        n = configs.get(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+    def test_moe_active_counts(self):
+        ds = configs.get("deepseek-v3-671b")
+        assert 30e9 <= ds.active_param_count() <= 45e9  # ~37B active
+        phi = configs.get("phi3.5-moe-42b-a6.6b")
+        assert 5e9 <= phi.active_param_count() <= 9e9  # ~6.6B active
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if a != "hubert_xlarge"])
+def test_decode_matches_forward(arch):
+    """prefill+decode teacher-forcing == full forward (KV/SSM/MLA caches)."""
+    cfg = configs.get(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 24
+    params = lm.init_params(key, cfg)
+    if cfg.input_mode == "tokens":
+        seq = jax.random.randint(key, (B, S + 1), 0, cfg.vocab)
+    else:
+        seq = jax.random.normal(key, (B, S + 1, cfg.d_model), jnp.bfloat16)
+    full, _ = jax.jit(lambda p, x: lm.forward(p, cfg, x))(params, seq)
+    pl_, cache = jax.jit(
+        lambda p, x: lm.prefill(p, cfg, x, max_len=S + 4))(params, seq[:, :S])
+    dl, _ = jax.jit(
+        lambda p, t, c: lm.decode_step(p, cfg, t, c)
+    )(params, seq[:, S:S + 1], cache)
+    scale = float(jnp.max(jnp.abs(full[:, S].astype(jnp.float32)))) + 1e-6
+    err = float(jnp.max(jnp.abs(
+        dl[:, 0].astype(jnp.float32) - full[:, S].astype(jnp.float32))))
+    # MLA decode uses the weight-absorbed (higher-precision) path, and the
+    # SSD chunked scan runs bf16 operands with f32 accumulation while the
+    # single-step decode path is f32 (matching Mamba2 reference kernels) ->
+    # bf16-level divergence expected there; everything else is exact.
+    tol = (0.08 * scale if (cfg.mla or cfg.ssm or cfg.hybrid)
+           else 1e-3 * scale + 1e-4)
+    assert err <= tol, f"decode mismatch {err} vs scale {scale}"
+
+
+def test_encoder_prefill_only():
+    cfg = configs.get("hubert-xlarge", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.bfloat16)
+    logits, _ = jax.jit(lambda p, x: lm.prefill(p, cfg, x))(params, x)
+    assert logits.shape == (2, cfg.vocab)
+
+
+def test_sliding_window_ring_buffer():
+    """hymba: decode beyond the window must keep matching a fresh prefill."""
+    cfg = configs.get("hymba-1.5b", smoke=True)  # window 64
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    S = 70  # > window
+    seq = jax.random.randint(jax.random.PRNGKey(1), (1, S + 1), 0, cfg.vocab)
+    full, _ = jax.jit(lambda p, x: lm.forward(p, cfg, x))(params, seq)
+    _, cache = jax.jit(lambda p, x: lm.prefill(p, cfg, x, max_len=S + 4)
+                       )(params, seq[:, :S])
+    dl, _ = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c)
+                    )(params, seq[:, S:S + 1], cache)
+    err = float(jnp.max(jnp.abs(
+        dl[:, 0].astype(jnp.float32) - full[:, S].astype(jnp.float32))))
+    assert err < 6e-2  # bf16 SSD scan vs f32 decode step (see tolerance note)
+
+
+class TestHeadPadding:
+    """Mesh-alignment head padding (§Perf cell B) is exact at init."""
+
+    def test_padded_equals_unpadded(self):
+        import dataclasses
+        cfg0 = dataclasses.replace(
+            configs.get("qwen2.5-14b", smoke=True),
+            n_heads=10, n_kv_heads=2, head_dim=16, d_model=96, d_ff=128)
+        cfg1 = dataclasses.replace(cfg0, head_pad_multiple=4)
+        assert lm._pad_geom(cfg1) == (12, 4, 2, 3)
+        key = jax.random.PRNGKey(0)
+        p0, p1 = lm.init_params(key, cfg0), lm.init_params(key, cfg1)
+        x = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg0.vocab)
+        l0, _ = lm.forward(p0, cfg0, x)
+        l1, _ = lm.forward(p1, cfg1, x)
+        err = float(jnp.max(jnp.abs(l0.astype(jnp.float32)
+                                    - l1.astype(jnp.float32))))
+        assert err < 1e-3
+
+    def test_mha_dead_head_padding(self):
+        import dataclasses
+        cfg0 = dataclasses.replace(
+            configs.get("qwen1.5-32b", smoke=True),
+            n_heads=5, n_kv_heads=5, head_dim=16, d_model=80, d_ff=128)
+        cfg1 = dataclasses.replace(cfg0, head_pad_multiple=4)
+        assert lm._pad_geom(cfg1) == (8, 8, 1, 1)
+        key = jax.random.PRNGKey(3)
+        p0, p1 = lm.init_params(key, cfg0), lm.init_params(key, cfg1)
+        x = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0, cfg0.vocab)
+        l0, _ = lm.forward(p0, cfg0, x)
+        l1, _ = lm.forward(p1, cfg1, x)
+        err = float(jnp.max(jnp.abs(l0.astype(jnp.float32)
+                                    - l1.astype(jnp.float32))))
+        assert err < 1e-3
+
+    def test_unsupported_geometry_noop(self):
+        import dataclasses
+        cfg = dataclasses.replace(configs.get("hymba-1.5b", smoke=True),
+                                  head_pad_multiple=16)
+        # kv=2 divides 16 -> supported here; force kv=5-like case:
+        cfg = dataclasses.replace(cfg, n_heads=10, n_kv_heads=5)
+        assert lm._pad_geom(cfg) is None  # 16 % 5 != 0 -> no-op

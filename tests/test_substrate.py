@@ -1,0 +1,236 @@
+"""Substrate tests: data pipeline, optimizers, checkpointing, compression,
+fault-tolerance policies, serving engine."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data import pipeline, synthetic
+from repro.ft import elastic
+from repro.optim import compression, optimizers as optim
+
+
+class TestData:
+    def test_deterministic(self):
+        a = synthetic.load("train", n_per_class=10, seed=3)
+        b = synthetic.load("train", n_per_class=10, seed=3)
+        assert np.array_equal(a.images, b.images)
+
+    def test_split_disjoint_stats(self):
+        tr = synthetic.load("train", n_per_class=20)
+        te = synthetic.load("test", n_per_class=20)
+        assert not np.array_equal(tr.images[:20], te.images[:20])
+
+    def test_shapes_and_range(self):
+        d = synthetic.load("train", n_per_class=5)
+        assert d.images.shape == (50, 32, 32, 3)
+        assert d.images.min() >= 0.0 and d.images.max() <= 1.0
+        assert sorted(np.unique(d.labels)) == list(range(10))
+
+    def test_grayscale_formula(self):
+        img = np.zeros((1, 2, 2, 3), np.float32)
+        img[..., 0] = 1.0  # pure red
+        g = synthetic.to_grayscale(img)
+        assert g.shape == (1, 2, 2, 1)
+        assert g[0, 0, 0, 0] == pytest.approx(0.2989)
+
+    def test_host_shard_partition(self):
+        slices = [pipeline.host_shard(103, i, 4) for i in range(4)]
+        ids = np.concatenate([np.arange(103)[s] for s in slices])
+        assert np.array_equal(np.sort(ids), np.arange(103))
+
+    def test_batches_with_curriculum_limit(self):
+        x = np.arange(100)[:, None]
+        y = np.arange(100)
+        order = np.argsort(-y)  # reverse
+        got = [yy for _, yy in pipeline.batches(
+            x, y, 10, order=order, limit=30, shuffle=False)]
+        assert np.concatenate(got).min() >= 70
+
+    def test_prefetch_preserves_order(self):
+        it = pipeline.prefetch(iter(range(20)), size=4)
+        assert list(it) == list(range(20))
+
+
+class TestOptim:
+    def test_adamw_quadratic_convergence(self):
+        opt = optim.adamw(0.1)
+        params = {"x": jnp.asarray(5.0)}
+        state = opt.init(params)
+        for _ in range(200):
+            g = jax.grad(lambda p: (p["x"] - 2.0) ** 2)(params)
+            params, state = opt.update(g, state, params)
+        assert float(params["x"]) == pytest.approx(2.0, abs=0.05)
+
+    def test_sgd_momentum(self):
+        opt = optim.sgd(0.05, momentum=0.9)
+        params = {"x": jnp.asarray(4.0)}
+        state = opt.init(params)
+        for _ in range(150):
+            g = jax.grad(lambda p: (p["x"] + 1.0) ** 2)(params)
+            params, state = opt.update(g, state, params)
+        assert float(params["x"]) == pytest.approx(-1.0, abs=0.05)
+
+    def test_cosine_schedule(self):
+        f = optim.cosine_schedule(1.0, 100, warmup=10)
+        assert float(f(jnp.asarray(0))) == pytest.approx(0.0)
+        assert float(f(jnp.asarray(10))) == pytest.approx(1.0, abs=0.01)
+        assert float(f(jnp.asarray(100))) == pytest.approx(0.0, abs=0.01)
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((4,), 10.0)}
+        clipped, norm = optim.clip_by_global_norm(g, 1.0)
+        assert float(optim.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+class TestCheckpoint:
+    def _tree(self, key):
+        return {"w": jax.random.normal(key, (8, 8)),
+                "b": jax.random.normal(jax.random.fold_in(key, 1), (8,)
+                                       ).astype(jnp.bfloat16),
+                "step": jnp.asarray(3, jnp.int32)}
+
+    def test_roundtrip_bf16(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        tree = self._tree(jax.random.PRNGKey(0))
+        ck.save(7, tree)
+        got = ck.restore(7, jax.tree_util.tree_map(jnp.zeros_like, tree))
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(tree)):
+            assert a.dtype == b.dtype
+            assert bool(jnp.all(a == b))
+
+    def test_latest_and_gc(self, tmp_path):
+        ck = Checkpointer(tmp_path, keep=2)
+        tree = self._tree(jax.random.PRNGKey(1))
+        for s in (1, 5, 9):
+            ck.save(s, tree)
+        assert ck.latest_step() == 9
+        assert not (tmp_path / "step_00000001").exists()  # gc'd
+
+    def test_async_save(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        ck.save(2, self._tree(jax.random.PRNGKey(2)), blocking=False)
+        ck.wait()
+        assert ck.latest_step() == 2
+
+    def test_atomicity_tmp_never_latest(self, tmp_path):
+        """A leftover .tmp dir (simulated crash) is never picked up."""
+        ck = Checkpointer(tmp_path)
+        ck.save(1, self._tree(jax.random.PRNGKey(3)))
+        (tmp_path / "step_00000009.tmp").mkdir()
+        assert ck.latest_step() == 1
+
+    def test_resume_equivalence(self, tmp_path):
+        """train N then M more == train N, checkpoint, restore, M more."""
+        opt = optim.adamw(0.05)
+
+        def run(steps, params, state):
+            for i in range(steps):
+                g = jax.grad(lambda p: jnp.sum((p["w"] - 1.0) ** 2))(params)
+                params, state = opt.update(g, state, params)
+            return params, state
+
+        p0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 4))}
+        s0 = opt.init(p0)
+        pa, sa = run(6, p0, s0)
+
+        pb, sb = run(3, p0, s0)
+        ck = Checkpointer(tmp_path)
+        ck.save(3, {"p": pb, "s": sb})
+        restored = ck.restore(3, {"p": pb, "s": sb})
+        pc, sc = run(3, restored["p"], restored["s"])
+        np.testing.assert_allclose(pa["w"], pc["w"], rtol=1e-6)
+
+
+class TestCompression:
+    def test_error_feedback_identity(self):
+        """deq_t + err_t == grad_t + err_{t-1} (lossless accounting)."""
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64,)) * 0.1}
+        err = compression.init_error_state(g)
+        deq, new_err = compression.compress_decompress(g, err)
+        np.testing.assert_allclose(
+            np.asarray(deq["w"] + new_err["w"]),
+            np.asarray(g["w"] + err["w"]), rtol=1e-5, atol=1e-7)
+
+    def test_quantisation_error_bounded(self):
+        g = {"w": jax.random.normal(jax.random.PRNGKey(1), (128,))}
+        err = compression.init_error_state(g)
+        deq, new_err = compression.compress_decompress(g, err)
+        bound = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+        assert float(jnp.max(jnp.abs(new_err["w"]))) <= bound * 0.5 + 1e-7
+
+    def test_convergence_with_compression(self):
+        """EF-compressed SGD still converges on a quadratic."""
+        opt = optim.sgd(0.05, momentum=0.0)
+        params = {"x": jnp.asarray(4.0)}
+        state = opt.init(params)
+        err = compression.init_error_state(params)
+        for _ in range(300):
+            g = jax.grad(lambda p: (p["x"] - 1.5) ** 2)(params)
+            g, err = compression.compress_decompress(g, err)
+            params, state = opt.update(g, state, params)
+        assert float(params["x"]) == pytest.approx(1.5, abs=0.05)
+
+    def test_ratio(self):
+        g = {"w": jnp.zeros((1000,))}
+        assert compression.compression_ratio(g) > 3.9
+
+
+class TestFaultTolerance:
+    def test_straggler_flag_and_evict(self):
+        mon = elastic.StragglerMonitor(n_hosts=4, deadline_factor=2.0,
+                                       min_deadline_s=0.0, evict_after=2)
+        verdict = None
+        for _ in range(2):
+            verdict = mon.step_times({0: 1.0, 1: 1.0, 2: 1.0, 3: 9.0})
+        assert verdict["stragglers"] == [3]
+        assert verdict["evict"] == [3]
+
+    def test_straggler_recovers(self):
+        mon = elastic.StragglerMonitor(n_hosts=2, min_deadline_s=0.0)
+        mon.step_times({0: 1.0, 1: 9.0})
+        v = mon.step_times({0: 1.0, 1: 1.0})
+        assert v["stragglers"] == [] and v["evict"] == []
+
+    def test_heartbeat(self):
+        hb = elastic.Heartbeat(timeout_s=5.0)
+        hb.beat(0, now=0.0)
+        hb.beat(1, now=8.0)
+        assert hb.dead_hosts(now=9.0) == [0]
+
+    def test_rescale_schedule_preserves_global_batch(self):
+        s = elastic.rescale_schedule(256, old_hosts=8, new_hosts=6,
+                                     per_host_batch=8)
+        assert s["effective_global_batch"] >= 256
+        assert s["grad_accum_steps"] == 6
+
+
+class TestServeEngine:
+    def test_batched_generation(self):
+        from repro.serve.engine import Engine, Request
+        from repro.models import lm as lm_mod
+        from repro import configs
+        cfg = configs.get("tinyllama-1.1b", smoke=True)
+        params = lm_mod.init_params(jax.random.PRNGKey(0), cfg)
+        eng = Engine(cfg, params, batch_size=3, max_len=64)
+        reqs = [Request(prompt=np.arange(5 + i) % cfg.vocab,
+                        max_new_tokens=4 + i) for i in range(5)]
+        out = eng.generate(reqs)
+        for i, r in enumerate(out):
+            assert r.done and len(r.out) == 4 + i
+            assert all(0 <= t < cfg.vocab for t in r.out)
+
+    def test_encoder_rejected(self):
+        from repro.serve.engine import Engine
+        from repro import configs
+        cfg = configs.get("hubert-xlarge", smoke=True)
+        with pytest.raises(ValueError):
+            Engine(cfg, params=None)

