@@ -1,23 +1,52 @@
-"""Kernel micro-benchmarks.
+"""Kernel micro-benchmarks: ref-vs-kernel comparison harness.
 
-On this CPU container the Pallas kernels execute in interpret mode (Python
-emulation — not a performance number), so the wall-times reported here are
-for the *compiled jnp reference paths* at deployment shapes; they give the
-CSV a concrete us_per_call column and catch performance regressions of the
-XLA fallbacks. TPU timings come from the roofline analysis instead
-(EXPERIMENTS.md §Roofline).
+Times the compiled jnp reference paths against the Pallas kernel paths at
+deployment shapes (B in {1, 256, 4096}; M=10 templates, N=784 features) and
+emits ``BENCH_kernels.json`` so the perf trajectory is tracked PR over PR.
+
+On this CPU container the Pallas kernels execute in interpret mode (lowered
+to XLA through the pallas interpreter — a correctness path, not a TPU
+number), so CPU "speedup" mostly measures interpreter overhead; the JSON
+records ``backend``/``interpret`` so TPU runs are distinguishable. The jnp
+reference wall-times remain real regression signals for the XLA fallbacks.
+
+BENCH_kernels.json schema::
+
+    {"backend": "cpu" | "tpu",
+     "interpret": bool,            # kernels ran via the pallas interpreter
+     "entries": [
+       {"kernel": "acam_match",    # | acam_similarity | *_classify_fused
+        "b": 256, "m": 10, "n": 784,
+        "ref_us": 123.4,           # jnp reference, us/call
+        "kernel_us": 456.7,        # pallas path, us/call
+        "speedup": 0.27,           # ref_us / kernel_us
+        "ref_cell_matches_per_us": ...,    # b*m*n / us
+        "kernel_cell_matches_per_us": ...}]}
+
+``--tune`` grid-searches kernel block sizes first (repro.kernels.tuning,
+persistent cache); ``--smoke`` restricts to B in {1, 256} for CI.
+
+`run()` keeps the harness contract used by benchmarks/run.py: a list of
+``{"name", "us_per_call", "derived"}`` rows.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
+BENCH_SHAPES = (1, 256, 4096)  # batch sizes; the paper bank is M=10, N=784
+SMOKE_SHAPES = (1, 256)
+M, N = 10, 784
+
 
 def _time(fn, *args, iters=20) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    out = fn(*args)  # single warmup call; reuse its result
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -25,27 +54,100 @@ def _time(fn, *args, iters=20) -> float:
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+def _compare_entry(kernel: str, b: int, m: int, n: int, ref_us: float,
+                   kernel_us: float) -> dict:
+    cells = b * m * n
+    return {
+        "kernel": kernel, "b": b, "m": m, "n": n,
+        "ref_us": round(ref_us, 2), "kernel_us": round(kernel_us, 2),
+        "speedup": round(ref_us / kernel_us, 4),
+        "ref_cell_matches_per_us": round(cells / ref_us, 1),
+        "kernel_cell_matches_per_us": round(cells / kernel_us, 1),
+    }
+
+
+def compare_kernels(batches=BENCH_SHAPES, *, iters=10) -> list[dict]:
+    """Ref-vs-kernel timing entries for both ACAM kernels + the fused path."""
+    from repro.core import templates as T
+    from repro.kernels.acam_match import ops as match_ops
+    from repro.kernels.acam_match.ref import acam_match_ref
+    from repro.kernels.acam_similarity import ops as sim_ops
+    from repro.kernels.acam_similarity.ref import acam_similarity_ref
+
+    key = jax.random.PRNGKey(0)
+    thr = jnp.zeros((N,))
+    tmpl = (jax.random.uniform(key, (M, N)) > 0.5).astype(jnp.float32)
+    lo = jnp.zeros((M, N))
+    hi = (jax.random.uniform(jax.random.fold_in(key, 1), (M, N)) > 0.3
+          ).astype(jnp.float32)
+    bank = T.TemplateBank(
+        templates=tmpl[:, None, :], lower=lo[:, None, :], upper=hi[:, None, :],
+        valid=jnp.ones((M, 1), bool), thresholds=thr)
+
+    entries = []
+    for b in batches:
+        f = jax.random.normal(jax.random.fold_in(key, b), (b, N))
+        it = max(3, iters // 4) if b >= 4096 else iters
+
+        # kernel paths timed under jit, as deployed (hybrid._fused_forward
+        # traces the dispatch into one graph; block lookup is trace-time)
+        ref_us = _time(jax.jit(acam_match_ref), f, thr, tmpl, iters=it)
+        ker_us = _time(jax.jit(lambda x: match_ops.match_scores(x, thr, tmpl)),
+                       f, iters=it)
+        entries.append(_compare_entry("acam_match", b, M, N, ref_us, ker_us))
+
+        ref_us = _time(jax.jit(acam_similarity_ref), f, lo, hi, iters=it)
+        ker_us = _time(jax.jit(lambda x: sim_ops.similarity_scores(x, lo, hi)),
+                       f, iters=it)
+        entries.append(_compare_entry("acam_similarity", b, M, N, ref_us,
+                                      ker_us))
+
+        # fused binarize->match->WTA vs binarize + reference classify
+        from repro.core import matching, quant
+
+        def ref_classify(feats):
+            q = quant.binarize(feats, bank.thresholds)
+            return matching.classify(q, bank, backend="reference")
+
+        ref_us = _time(jax.jit(ref_classify), f, iters=it)
+        ker_us = _time(
+            jax.jit(lambda feats: match_ops.classify_fused(
+                feats, bank.thresholds, bank.templates, bank.valid)),
+            f, iters=it)
+        entries.append(_compare_entry("acam_match_classify_fused", b, M, N,
+                                      ref_us, ker_us))
+    return entries
+
+
+def write_bench_json(entries: list[dict],
+                     path: str = "BENCH_kernels.json") -> None:
+    from repro.kernels import tuning
+
+    payload = {
+        "backend": tuning.backend(),
+        # same predicate the ops wrappers use to enable interpret mode, so
+        # the flag always reflects how the kernels actually executed
+        "interpret": tuning.interpret_mode(),
+        "entries": entries,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
 def run() -> list[dict]:
+    fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
     rows = []
     key = jax.random.PRNGKey(0)
 
-    # acam matching at the paper's deployment shape (B=1 is the edge case;
-    # B=256 the calibration batch)
-    from repro.kernels.acam_match.ref import acam_match_ref
-    for b in (1, 256):
-        f = jax.random.normal(key, (b, 784))
-        thr = jnp.zeros((784,))
-        t = (jax.random.uniform(key, (10, 784)) > 0.5).astype(jnp.float32)
-        us = _time(jax.jit(acam_match_ref), f, thr, t)
-        rows.append({"name": f"acam_match_ref_b{b}", "us_per_call": us,
-                     "derived": f"{b*10*784/us:.0f} cell-matches/us"})
-
-    from repro.kernels.acam_similarity.ref import acam_similarity_ref
-    q = jax.random.uniform(key, (256, 784))
-    lo = jnp.zeros((10, 784)); hi = jnp.ones((10, 784))
-    us = _time(jax.jit(acam_similarity_ref), q, lo, hi)
-    rows.append({"name": "acam_similarity_ref_b256", "us_per_call": us,
-                 "derived": f"{256*10*784/us:.0f} cell-ops/us"})
+    entries = compare_kernels(SMOKE_SHAPES if fast else BENCH_SHAPES)
+    write_bench_json(entries)
+    for e in entries:
+        rows.append({
+            "name": f"{e['kernel']}_b{e['b']}",
+            "us_per_call": e["kernel_us"],
+            "derived": (f"ref={e['ref_us']:.0f}us,speedup={e['speedup']:.2f},"
+                        f"{e['kernel_cell_matches_per_us']:.0f} cell-matches/us"),
+        })
 
     from repro.kernels.kd_loss.ref import kd_loss_ref
     zs = jax.random.normal(key, (64, 32000))
@@ -67,6 +169,27 @@ def run() -> list[dict]:
     return rows
 
 
-if __name__ == "__main__":
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune kernel blocks before benchmarking")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: B in {1, 256} only")
+    args = ap.parse_args()
+
+    if args.smoke:
+        os.environ["REPRO_BENCH_FAST"] = "1"
+    if args.tune:
+        from repro.kernels import tuning
+        for k, blk in tuning.autotune_acam(
+                shapes=[(b, M, N) for b in
+                        (SMOKE_SHAPES if args.smoke else BENCH_SHAPES)]).items():
+            print(f"tuned {k} -> {blk}")
+
     for r in run():
         print(r)
+    print("wrote BENCH_kernels.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,9 +39,15 @@ class ACAMHead(NamedTuple):
     alpha: float = 1.0
 
     def __call__(self, features: Array) -> tuple[Array, Array]:
-        """features: (B, N) raw front-end features -> (pred, per_class)."""
-        q = quant.binarize(features, self.bank.thresholds)
-        return matching.classify(q, self.bank, method=self.method, alpha=self.alpha)
+        """features: (B, N) raw front-end features -> (pred, per_class).
+
+        Executes via `matching.classify_features`: on the kernel backend
+        (the default) this is a single fused pallas_call — binarize ->
+        match -> valid mask -> Eq. 12 per-class max -> WTA — with no
+        (B, M) score round-trip through HBM.
+        """
+        return matching.classify_features(
+            features, self.bank, method=self.method, alpha=self.alpha)
 
     def scores(self, features: Array) -> Array:
         q = quant.binarize(features, self.bank.thresholds)
@@ -93,6 +99,20 @@ def fit_acam_head(
     return ACAMHead(bank=bank, method=method)
 
 
+@functools.partial(jax.jit, static_argnames=("feature_fn", "method", "alpha"))
+def _fused_forward(params: Any, bank: templates.TemplateBank, x: Array, *,
+                   feature_fn: Callable[[Any, Array], Array], method: str,
+                   alpha: float) -> tuple[Array, Array]:
+    """One end-to-end jitted graph: front-end -> fused ACAM classify.
+
+    Module-level (static feature_fn/method/alpha, bank as a pytree operand)
+    so repeated `predict`/`accuracy` calls hit the jit cache instead of
+    retracing per call.
+    """
+    feats = feature_fn(params, x)
+    return matching.classify_features(feats, bank, method=method, alpha=alpha)
+
+
 class HybridClassifier(NamedTuple):
     """Front-end params + feature_fn + ACAM head, with the energy report."""
 
@@ -101,14 +121,15 @@ class HybridClassifier(NamedTuple):
     head: ACAMHead
 
     def predict(self, x: Array) -> Array:
-        feats = self.feature_fn(self.params, x)
-        pred, _ = self.head(feats)
+        pred, _ = _fused_forward(self.params, self.head.bank, x,
+                                 feature_fn=self.feature_fn,
+                                 method=self.head.method,
+                                 alpha=self.head.alpha)
         return pred
 
     def accuracy(self, x: Array, y: Array, *, batch_size: int = 1024) -> float:
         correct = 0
-        fn = jax.jit(lambda p, xb: self.head(self.feature_fn(p, xb))[0])
         for i in range(0, x.shape[0], batch_size):
-            pred = fn(self.params, x[i : i + batch_size])
+            pred = self.predict(x[i : i + batch_size])
             correct += int(jnp.sum(pred == y[i : i + batch_size]))
         return correct / x.shape[0]

@@ -9,33 +9,161 @@ Two matching models, both vectorised over (batch, class, template):
   decision       C(Q)       = argmax_j max_k S(Q, T_{j,k})             (Eq. 12,
                               max over the k templates of each class)
 
-These are the pure-jnp reference implementations; the Pallas TPU kernels in
-`repro.kernels.acam_match` / `repro.kernels.acam_similarity` compute the same
-quantities (kernels' ref.py delegates here).
+Backend dispatch
+----------------
+The public entry points (`feature_count_scores`, `similarity_scores`,
+`classify`, `classify_features`) route through the Pallas TPU kernels
+(`repro.kernels.acam_match`, `repro.kernels.acam_similarity`) **by default**,
+falling back to interpret mode on CPU and to the pure-jnp references for
+tiny shapes. The hot (B, C, K, N) intermediate the references materialise in
+HBM never exists on the kernel path, and `classify_features` is a *single*
+pallas_call (fused binarize -> match -> valid mask -> Eq. 12 per-class max
+-> WTA argmax).
+
+Select the backend globally with `set_backend("auto" | "kernel" |
+"reference")` or the ``REPRO_MATCHING_BACKEND`` environment variable, or
+per call via the ``backend=`` keyword:
+
+  auto       kernel path, except shapes with B*C*K*N < 32768 (reference)
+  kernel     always the Pallas kernels (interpret mode off-TPU)
+  reference  always the jnp references below
+
+Kernel block sizes resolve through the `repro.kernels.tuning` autotuner
+cache. The references remain exported (`feature_count_scores_ref`,
+`similarity_scores_ref`) as the parity oracles.
+
+The bank's (C, K, N) layout is flattened class-major for the two-stage
+kernels and K-major (`repro.kernels.layout`) for the fused classify, with
+`valid` masking and the Eq. 12 per-class max folded into the kernel
+epilogue.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant
 from repro.core.templates import TemplateBank
 
 Array = jax.Array
 
 NEG = -jnp.inf
 
+#: below this many (B * C * K * N) cell-match operations the jnp reference
+#: beats the kernel's padding/launch overhead — stay on XLA.
+TINY_ELEMENTS = 32768
 
-def feature_count_scores(queries: Array, templates: Array, valid: Array | None = None) -> Array:
+#: fused classify keeps all K * Cp template rows VMEM-resident; past this
+#: row count fall back to the two-stage kernel path.
+MAX_FUSED_ROWS = 2048
+
+_BACKENDS = ("auto", "kernel", "reference")
+_backend = os.environ.get("REPRO_MATCHING_BACKEND", "auto")
+
+
+def set_backend(name: str) -> None:
+    """Select the matching backend: "auto" (default), "kernel", "reference".
+
+    The selection is read at *trace time*: callers that jit around these
+    entry points (e.g. `hybrid._fused_forward`) bake the dispatch decision
+    into their jit cache, so a later `set_backend` does not retroactively
+    change already-traced executables. Pin per call with ``backend=`` (a
+    different value is a different trace) or set ``REPRO_MATCHING_BACKEND``
+    before the first call when that matters.
+    """
+    global _backend
+    if name not in _BACKENDS:
+        raise ValueError(f"unknown matching backend {name!r}; use {_BACKENDS}")
+    _backend = name
+
+
+def get_backend() -> str:
+    return _backend
+
+
+def _use_kernel(n_elements: int, backend: str | None) -> bool:
+    b = backend or _backend
+    if b not in _BACKENDS:
+        raise ValueError(f"unknown matching backend {b!r}; use {_BACKENDS}")
+    if b == "auto":
+        return n_elements >= TINY_ELEMENTS
+    return b == "kernel"
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp references (the parity oracles; also the tiny-shape fallback)
+# ---------------------------------------------------------------------------
+
+def feature_count_scores_ref(queries: Array, templates: Array,
+                             valid: Array | None = None) -> Array:
+    """Eq. 8 reference: materialises the (B, C, K, N) comparison in HBM."""
+    eq = queries[:, None, None, :] == templates[None, :, :, :]
+    scores = jnp.sum(eq, axis=-1).astype(jnp.float32)
+    if valid is not None:
+        scores = jnp.where(valid[None, :, :], scores, NEG)
+    return scores
+
+
+def similarity_scores_ref(
+    queries: Array,
+    lower: Array,
+    upper: Array,
+    valid: Array | None = None,
+    *,
+    alpha: float = 1.0,
+) -> Array:
+    """Eq. 9-11 reference: materialises the (B, C, K, N) intermediate."""
+    q = queries[:, None, None, :]
+    lo = lower[None, :, :, :]
+    hi = upper[None, :, :, :]
+    above = jnp.maximum(q - hi, 0.0)
+    below = jnp.maximum(lo - q, 0.0)
+    d = jnp.sum(above**2 + below**2, axis=-1)  # Eq. 9
+    hit = jnp.mean((q >= lo) & (q <= hi), axis=-1)  # Eq. 10
+    s = hit / (1.0 + alpha * d)  # Eq. 11
+    if valid is not None:
+        s = jnp.where(valid[None, :, :], s, NEG)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Dispatching entry points
+# ---------------------------------------------------------------------------
+
+def _binary_thresholds(n: int) -> Array:
+    # binary {0,1} queries re-binarise exactly through a 0.5 threshold,
+    # letting the kernels' fused binarisation stage pass them through.
+    # Always float32: a bool-dtype 0.5 would collapse to True and binarise
+    # every query bit to 0.
+    return jnp.full((n,), 0.5, jnp.float32)
+
+
+def feature_count_scores(queries: Array, templates: Array,
+                         valid: Array | None = None, *,
+                         backend: str | None = None) -> Array:
     """Eq. 8 for a bank of templates.
 
     queries:   (B, N) binary {0,1}
     templates: (C, K, N) binary {0,1}
     returns:   (B, C, K) match counts; invalid templates get -inf.
+
+    Dispatches to the `acam_match` Pallas kernel (exact: the bipolar-matmul
+    identity is integer-exact in f32) unless the shape is tiny or the
+    backend is pinned to "reference".
     """
-    eq = queries[:, None, None, :] == templates[None, :, :, :]
-    scores = jnp.sum(eq, axis=-1).astype(jnp.float32)
+    b, n = queries.shape
+    c, k, _ = templates.shape
+    if not _use_kernel(b * c * k * n, backend):
+        return feature_count_scores_ref(queries, templates, valid)
+    from repro.kernels.acam_match import ops as match_ops
+
+    flat = match_ops.match_scores(
+        queries.astype(jnp.float32), _binary_thresholds(n),
+        templates.reshape(c * k, n).astype(jnp.float32))
+    scores = flat.reshape(b, c, k)
     if valid is not None:
         scores = jnp.where(valid[None, :, :], scores, NEG)
     return scores
@@ -48,21 +176,27 @@ def similarity_scores(
     valid: Array | None = None,
     *,
     alpha: float = 1.0,
+    backend: str | None = None,
 ) -> Array:
     """Eq. 9-11 for a bank of window templates.
 
     queries:      (B, N)
     lower/upper:  (C, K, N)
     returns:      (B, C, K) similarity scores.
+
+    Dispatches to the `acam_similarity` Pallas kernel (the (B, M, N)
+    intermediate never reaches HBM) with reference fallback as above.
     """
-    q = queries[:, None, None, :]
-    lo = lower[None, :, :, :]
-    hi = upper[None, :, :, :]
-    above = jnp.maximum(q - hi, 0.0)
-    below = jnp.maximum(lo - q, 0.0)
-    d = jnp.sum(above**2 + below**2, axis=-1)  # Eq. 9
-    hit = jnp.mean((q >= lo) & (q <= hi), axis=-1)  # Eq. 10
-    s = hit / (1.0 + alpha * d)  # Eq. 11
+    b, n = queries.shape
+    c, k, _ = lower.shape
+    if not _use_kernel(b * c * k * n, backend):
+        return similarity_scores_ref(queries, lower, upper, valid,
+                                     alpha=alpha)
+    from repro.kernels.acam_similarity import ops as sim_ops
+
+    flat = sim_ops.similarity_scores(queries, lower.reshape(c * k, n),
+                                     upper.reshape(c * k, n), alpha=alpha)
+    s = flat.reshape(b, c, k)
     if valid is not None:
         s = jnp.where(valid[None, :, :], s, NEG)
     return s
@@ -78,21 +212,90 @@ def classify_scores(scores: Array) -> tuple[Array, Array]:
 
 
 @functools.partial(jax.jit, static_argnames=("method", "alpha"))
+def _classify_ref(queries: Array, bank: TemplateBank, *, method: str,
+                  alpha: float) -> tuple[Array, Array]:
+    if method == "feature_count":
+        scores = feature_count_scores_ref(queries, bank.templates, bank.valid)
+    else:
+        scores = similarity_scores_ref(queries, bank.lower, bank.upper,
+                                       bank.valid, alpha=alpha)
+    return classify_scores(scores)
+
+
+def _classify_kernel_path(features: Array, thresholds: Array,
+                          bank: TemplateBank, method: str,
+                          alpha: float) -> tuple[Array, Array]:
+    """Kernel dispatch shared by `classify` and `classify_features`."""
+    from repro.kernels import layout
+    from repro.kernels.acam_match import ops as match_ops
+    from repro.kernels.acam_similarity import ops as sim_ops
+
+    c, k, n = bank.templates.shape
+    fused_rows = k * layout.padded_classes(c)
+    if method == "feature_count":
+        if fused_rows <= MAX_FUSED_ROWS:
+            return match_ops.classify_fused(features, thresholds,
+                                            bank.templates, bank.valid)
+        return match_ops.classify(features, thresholds,
+                                  bank.templates.reshape(c * k, n),
+                                  bank.valid.reshape(c * k), c)
+    if fused_rows <= MAX_FUSED_ROWS:
+        return sim_ops.classify_fused(features, thresholds, bank.lower,
+                                      bank.upper, bank.valid, alpha=alpha)
+    q = quant.binarize(features, thresholds)
+    return sim_ops.classify(q, bank.lower.reshape(c * k, n),
+                            bank.upper.reshape(c * k, n),
+                            bank.valid.reshape(c * k), c, alpha=alpha)
+
+
 def classify(
     queries: Array,
     bank: TemplateBank,
     *,
     method: str = "feature_count",
     alpha: float = 1.0,
+    backend: str | None = None,
 ) -> tuple[Array, Array]:
-    """End-to-end Eq. 8/11 + Eq. 12. queries are *binary* feature maps."""
-    if method == "feature_count":
-        scores = feature_count_scores(queries, bank.templates, bank.valid)
-    elif method == "similarity":
-        scores = similarity_scores(queries, bank.lower, bank.upper, bank.valid, alpha=alpha)
-    else:
+    """End-to-end Eq. 8/11 + Eq. 12. queries are *binary* feature maps.
+
+    On the kernel backend this executes as a single fused pallas_call
+    (binarize->match->valid mask->per-class max->WTA) when the bank fits the
+    fused layout, else as the two-stage kernel + jnp epilogue.
+    """
+    if method not in ("feature_count", "similarity"):
         raise ValueError(f"unknown matching method {method}")
-    return classify_scores(scores)
+    b, n = queries.shape
+    c, k, _ = bank.templates.shape
+    if not _use_kernel(b * c * k * n, backend):
+        return _classify_ref(queries, bank, method=method, alpha=alpha)
+    return _classify_kernel_path(queries.astype(jnp.float32),
+                                 _binary_thresholds(n), bank, method, alpha)
+
+
+def classify_features(
+    features: Array,
+    bank: TemplateBank,
+    *,
+    method: str = "feature_count",
+    alpha: float = 1.0,
+    backend: str | None = None,
+) -> tuple[Array, Array]:
+    """Raw front-end features -> binarize -> match -> WTA (paper Fig. 2).
+
+    The kernel path fuses the §II-C mean-threshold binarisation with the
+    match and the Eq. 12 decision into one pallas_call — this is what
+    `ACAMHead.__call__` executes. The reference path binarises with
+    `bank.thresholds` and reuses the jnp oracles.
+    """
+    if method not in ("feature_count", "similarity"):
+        raise ValueError(f"unknown matching method {method}")
+    b, n = features.shape
+    c, k, _ = bank.templates.shape
+    if not _use_kernel(b * c * k * n, backend):
+        q = quant.binarize(features, bank.thresholds)
+        return _classify_ref(q, bank, method=method, alpha=alpha)
+    return _classify_kernel_path(features, bank.thresholds, bank, method,
+                                 alpha)
 
 
 def winner_take_all(per_class: Array) -> Array:

@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel package ships <name>.py (the pallas_call), ops.py (public
+wrappers: interpret mode on CPU, compiled on TPU, block sizes resolved via
+the `repro.kernels.tuning` autotuner cache) and ref.py (pure-jnp oracle).
+
+`repro.core.matching` dispatches the ACAM hot path here by default; the
+fused classify variants use the K-major bank layout in
+`repro.kernels.layout`. Ref-vs-kernel timings are tracked in
+BENCH_kernels.json (benchmarks/kernel_bench.py).
+"""

@@ -18,6 +18,23 @@ feature map never round-trips to HBM, then runs an MXU-tiled matmul:
     out block (bm, bn) f32   VMEM accumulator
 
 All block dims are multiples of (8, 128) so MXU/VREG tiling is aligned.
+Block sizes are no longer hardcoded at the call sites: `repro.kernels.tuning`
+resolves a tuned `(bm, bn, bk)` from its persistent JSON cache
+(``$REPRO_TUNING_CACHE``, default ``~/.cache/repro/pallas_blocks.json``,
+keyed ``kernel|backend|shape|dtype``) and falls back to `DEFAULT_BLOCK`.
+
+Two entry points:
+
+  `acam_match`          -> (B, M) match-count scores (two-stage path).
+  `acam_match_classify` -> fused binarize->match->valid-mask->per-class max
+                           ->argmax/WTA (Eq. 12) in ONE pallas_call: the
+                           (B, M) score matrix never round-trips to HBM.
+                           Templates arrive K-major (`repro.kernels.layout`)
+                           so the per-class max is K contiguous lane-aligned
+                           slices of the score row.
+
+`repro.core.matching` dispatches to these by default (see its docstring for
+the backend-selection API); the jnp references remain as oracles.
 """
 from __future__ import annotations
 
@@ -28,6 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = (128, 128, 512)  # bm, bn, bk
+PRED_LANES = 128  # WTA index output padded to one lane tile
 
 
 def _kernel(f_ref, thr_ref, t_ref, o_ref, *, nk: int):
@@ -91,3 +109,87 @@ def acam_match(features: jax.Array, thresholds: jax.Array,
     # true N in the correction term.
     scores = (np_ + dot[:b, :m]) * 0.5 - (np_ - n)
     return scores
+
+
+def _classify_kernel(f_ref, thr_ref, t_ref, vrow_ref, acc_ref, pc_ref,
+                     pred_ref, *, nk: int, n_true: int, num_k: int, cp: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pm = jnp.where(f_ref[...] > thr_ref[...], 1.0, -1.0).astype(jnp.bfloat16)
+    t_pm = (2.0 * t_ref[...] - 1.0).astype(jnp.bfloat16)
+    acc_ref[...] += jax.lax.dot_general(
+        q_pm, t_pm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        from repro.kernels.layout import wta_epilogue
+
+        np_ = float(nk * f_ref.shape[-1])
+        # bipolar identity + padded-column correction (same as acam_match)
+        scores = (np_ + acc_ref[...]) * 0.5 - (np_ - n_true)
+        per_class, pred = wta_epilogue(scores, vrow_ref[...], cp, num_k)
+        pc_ref[...] = per_class
+        pred_ref[...] = jnp.broadcast_to(pred[:, None], pred_ref.shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_classes", "block", "interpret"))
+def acam_match_classify(features: jax.Array, thresholds: jax.Array,
+                        templates_kmajor: jax.Array, valid_row: jax.Array,
+                        num_classes: int, *, block=DEFAULT_BLOCK,
+                        interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Fused Eq. 8 + Eq. 12: one pallas_call from raw features to WTA.
+
+    features:         (B, N) float — raw front-end feature maps
+    thresholds:       (N,) binarisation thresholds
+    templates_kmajor: (K * Cp, N) {0,1}, K-major layout (repro.kernels.layout)
+    valid_row:        (K * Cp,) float {0,1} row validity
+    num_classes:      true C (Cp = padded lane multiple)
+
+    Returns (pred (B,) int32, per_class (B, C) f32). Only `bm`/`bk` of
+    `block` are used — the template dimension is resident in full.
+    """
+    b, n = features.shape
+    mk, _ = templates_kmajor.shape
+    from repro.kernels.layout import padded_classes
+    cp = padded_classes(num_classes)
+    num_k = mk // cp
+    assert num_k * cp == mk, "templates must be K-major with padded classes"
+    bm, _, bk = block
+    bp, np_ = (-(-b // bm) * bm, -(-n // bk) * bk)
+
+    f = jnp.pad(features, ((0, bp - b), (0, np_ - n)))
+    thr = jnp.pad(thresholds, (0, np_ - n), constant_values=jnp.inf)[None, :]
+    t = jnp.pad(templates_kmajor, ((0, 0), (0, np_ - n)))
+    vrow = valid_row[None, :]
+
+    nk = np_ // bk
+    grid = (bp // bm, nk)
+    _, per_class, pred = pl.pallas_call(
+        functools.partial(_classify_kernel, nk=nk, n_true=n, num_k=num_k,
+                          cp=cp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((1, bk), lambda i, k: (0, k)),
+            pl.BlockSpec((mk, bk), lambda i, k: (0, k)),
+            pl.BlockSpec((1, mk), lambda i, k: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, mk), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm, cp), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, mk), jnp.float32),  # score accumulator
+            jax.ShapeDtypeStruct((bp, cp), jnp.float32),  # per-class max
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.int32),  # WTA index
+        ],
+        interpret=interpret,
+    )(f, thr, t, vrow)
+    return pred[:b, 0], per_class[:b, :num_classes]

@@ -1,8 +1,15 @@
-"""jit'd public wrapper for the acam_match kernel.
+"""Public wrappers for the acam_match kernel.
 
 `match_scores` runs the Pallas kernel (interpret=True on CPU, compiled on
 TPU); `classify` adds the WTA argmax epilogue (Eq. 12) with multi-template
-max-pooling, mirroring repro.core.matching.classify semantics.
+max-pooling, mirroring repro.core.matching.classify semantics;
+`classify_fused` is the single-pallas_call binarize->match->WTA path over a
+K-major bank layout (no (B, M) score round-trip).
+
+Block sizes: when ``block`` is omitted the wrapper resolves a tuned
+``(bm, bn, bk)`` via `repro.kernels.tuning.get_block` (persistent JSON cache
+keyed by kernel|backend|shape|dtype, `DEFAULT_BLOCK` fallback). Resolution
+is a pure dict lookup, so these wrappers stay safe to call at jit trace time.
 """
 from __future__ import annotations
 
@@ -11,29 +18,57 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.acam_match.acam_match import DEFAULT_BLOCK, acam_match
+from repro.kernels import layout, tuning
+from repro.kernels.acam_match.acam_match import (DEFAULT_BLOCK, acam_match,
+                                                 acam_match_classify)
 
 
-def _on_cpu() -> bool:
-    return jax.devices()[0].platform == "cpu"
+_on_cpu = tuning.interpret_mode
+_resolve = functools.partial(tuning.resolve_block, "acam_match")
 
 
-@functools.partial(jax.jit, static_argnames=("block",))
 def match_scores(features: jax.Array, thresholds: jax.Array,
-                 templates: jax.Array, *, block=DEFAULT_BLOCK) -> jax.Array:
+                 templates: jax.Array, *, block=None) -> jax.Array:
+    block = _resolve(features, templates.shape[0], block)
     return acam_match(features, thresholds, templates, block=block,
                       interpret=_on_cpu())
 
 
-@functools.partial(jax.jit, static_argnames=("num_classes", "block"))
+@functools.partial(jax.jit, static_argnames=("num_classes", "block",
+                                             "interpret"))
+def _classify_two_stage(features, thresholds, templates_flat, valid_flat,
+                        num_classes, *, block, interpret):
+    scores = acam_match(features, thresholds, templates_flat, block=block,
+                        interpret=interpret)
+    scores = jnp.where(valid_flat[None, :], scores, -jnp.inf)
+    k = templates_flat.shape[0] // num_classes
+    per_class = jnp.max(scores.reshape(scores.shape[0], num_classes, k),
+                        axis=-1)
+    return jnp.argmax(per_class, axis=-1), per_class
+
+
 def classify(features: jax.Array, thresholds: jax.Array,
              templates_flat: jax.Array, valid_flat: jax.Array,
-             num_classes: int, *, block=DEFAULT_BLOCK) -> tuple[jax.Array, jax.Array]:
+             num_classes: int, *, block=None) -> tuple[jax.Array, jax.Array]:
     """templates_flat: (C*K, N) class-major; valid_flat: (C*K,) bool.
 
     Returns (pred (B,), per_class (B, C))."""
-    scores = match_scores(features, thresholds, templates_flat, block=block)
-    scores = jnp.where(valid_flat[None, :], scores, -jnp.inf)
-    k = templates_flat.shape[0] // num_classes
-    per_class = jnp.max(scores.reshape(scores.shape[0], num_classes, k), axis=-1)
-    return jnp.argmax(per_class, axis=-1), per_class
+    block = _resolve(features, templates_flat.shape[0], block)
+    return _classify_two_stage(features, thresholds, templates_flat,
+                               valid_flat, num_classes, block=block,
+                               interpret=_on_cpu())
+
+
+def classify_fused(features: jax.Array, thresholds: jax.Array,
+                   templates_ck: jax.Array, valid_ck: jax.Array, *,
+                   block=None) -> tuple[jax.Array, jax.Array]:
+    """Single-pallas_call Eq. 8 + Eq. 12 over a (C, K, N) bank.
+
+    Flattens the bank K-major (repro.kernels.layout) and runs
+    `acam_match_classify`. Returns (pred (B,) int32, per_class (B, C))."""
+    c, k, n = templates_ck.shape
+    block = _resolve(features, c * k, block)
+    t_km = layout.flatten_kmajor(templates_ck, c)
+    v_km = layout.valid_kmajor(valid_ck, c)
+    return acam_match_classify(features, thresholds, t_km, v_km, c,
+                               block=block, interpret=_on_cpu())

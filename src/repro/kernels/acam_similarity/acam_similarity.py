@@ -14,6 +14,21 @@ window blocks to a (bm, bn, bk) VMEM tile, accumulating D and H into two
 epilogue on the last k step — the (B, M, N) intermediate never exists in
 HBM (the jnp oracle materialises it, which is exactly why this kernel
 exists).
+
+Block sizes come from `repro.kernels.tuning` (persistent JSON cache at
+``$REPRO_TUNING_CACHE`` / ``~/.cache/repro/pallas_blocks.json``, keyed
+``kernel|backend|shape|dtype``) with `DEFAULT_BLOCK` as the untuned
+fallback. Two entry points:
+
+  `acam_similarity`          -> (B, M) Eq. 11 scores (two-stage path).
+  `acam_similarity_classify` -> fused binarize->window-match->valid-mask->
+                                per-class max->argmax/WTA (Eq. 12) in ONE
+                                pallas_call over a K-major template layout
+                                (`repro.kernels.layout`); no (B, M) score
+                                round-trip.
+
+`repro.core.matching` dispatches here by default; the jnp reference stays
+as the oracle.
 """
 from __future__ import annotations
 
@@ -24,6 +39,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = (8, 128, 128)  # bm (queries), bn (templates), bk (features)
+PRED_LANES = 128  # WTA index output padded to one lane tile
 
 
 def _kernel(q_ref, lo_ref, hi_ref, d_ref, h_ref, s_ref, *, nk: int,
@@ -94,3 +110,102 @@ def acam_similarity(queries: jax.Array, lower: jax.Array, upper: jax.Array,
         interpret=interpret,
     )(q.astype(jnp.float32), lo.astype(jnp.float32), hi.astype(jnp.float32))
     return s[:b, :m]
+
+
+def _classify_kernel(f_ref, thr_ref, lo_ref, hi_ref, vrow_ref, d_ref, h_ref,
+                     pc_ref, pred_ref, *, nk: int, alpha: float, n_true: int,
+                     num_k: int, cp: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        d_ref[...] = jnp.zeros_like(d_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    # fused binarisation (paper §II-C): padded columns carry thr=+inf -> q=0,
+    # matching the zero-padded windows, corrected in the epilogue.
+    q = jnp.where(f_ref[...] > thr_ref[...], 1.0, 0.0)[:, None, :]
+    lo = lo_ref[...][None, :, :]
+    hi = hi_ref[...][None, :, :]
+
+    above = jnp.maximum(q - hi, 0.0)
+    below = jnp.maximum(lo - q, 0.0)
+    d_ref[...] += jnp.sum(above * above + below * below, axis=-1)
+    hit = jnp.logical_and(q >= lo, q <= hi)
+    h_ref[...] += jnp.sum(hit.astype(jnp.float32), axis=-1)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        from repro.kernels.layout import wta_epilogue
+
+        pad_hits = float(nk * f_ref.shape[-1] - n_true)
+        h = (h_ref[...] - pad_hits) / float(n_true)
+        s = h / (1.0 + alpha * d_ref[...])
+        per_class, pred = wta_epilogue(s, vrow_ref[...], cp, num_k)
+        pc_ref[...] = per_class
+        pred_ref[...] = jnp.broadcast_to(pred[:, None], pred_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "alpha", "block",
+                                             "interpret"))
+def acam_similarity_classify(features: jax.Array, thresholds: jax.Array,
+                             lower_kmajor: jax.Array, upper_kmajor: jax.Array,
+                             valid_row: jax.Array, num_classes: int, *,
+                             alpha: float = 1.0, block=DEFAULT_BLOCK,
+                             interpret: bool = False
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Fused Eq. 9-12: raw features -> binarize -> window match -> WTA.
+
+    features:      (B, N) raw front-end feature maps
+    thresholds:    (N,) binarisation thresholds
+    lower/upper:   (K * Cp, N) K-major window bank (repro.kernels.layout)
+    valid_row:     (K * Cp,) float {0,1}
+    Returns (pred (B,) int32, per_class (B, C) f32). Only bm/bk of `block`
+    are used; bm is shrunk if the (bm, K*Cp, bk) tile would bust VMEM.
+    """
+    b, n = features.shape
+    mk = lower_kmajor.shape[0]
+    from repro.kernels.layout import padded_classes
+    cp = padded_classes(num_classes)
+    num_k = mk // cp
+    assert num_k * cp == mk, "windows must be K-major with padded classes"
+    bm, _, bk = block
+    while bm > 8 and bm * mk * bk * 4 > 8 * 1024 * 1024:
+        bm //= 2
+    bp, np_ = (-(-b // bm) * bm, -(-n // bk) * bk)
+
+    f = jnp.pad(features.astype(jnp.float32), ((0, bp - b), (0, np_ - n)))
+    thr = jnp.pad(thresholds.astype(jnp.float32), (0, np_ - n),
+                  constant_values=jnp.inf)[None, :]
+    lo = jnp.pad(lower_kmajor.astype(jnp.float32), ((0, 0), (0, np_ - n)))
+    hi = jnp.pad(upper_kmajor.astype(jnp.float32), ((0, 0), (0, np_ - n)))
+    vrow = valid_row[None, :]
+
+    nk = np_ // bk
+    grid = (bp // bm, nk)
+    _, _, per_class, pred = pl.pallas_call(
+        functools.partial(_classify_kernel, nk=nk, alpha=alpha, n_true=n,
+                          num_k=num_k, cp=cp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((1, bk), lambda i, k: (0, k)),
+            pl.BlockSpec((mk, bk), lambda i, k: (0, k)),
+            pl.BlockSpec((mk, bk), lambda i, k: (0, k)),
+            pl.BlockSpec((1, mk), lambda i, k: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, mk), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm, mk), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm, cp), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, mk), jnp.float32),  # D accumulator
+            jax.ShapeDtypeStruct((bp, mk), jnp.float32),  # H accumulator
+            jax.ShapeDtypeStruct((bp, cp), jnp.float32),  # per-class max
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.int32),  # WTA index
+        ],
+        interpret=interpret,
+    )(f, thr, lo, hi, vrow)
+    return pred[:b, 0], per_class[:b, :num_classes]

@@ -1,4 +1,13 @@
-"""jit'd public wrapper for the acam_similarity kernel."""
+"""Public wrappers for the acam_similarity kernel.
+
+`similarity_scores` runs the two-stage Pallas kernel; `classify` adds the
+Eq. 12 epilogue in jnp; `classify_fused` is the single-pallas_call
+binarize->window-match->WTA path over a K-major bank layout.
+
+Blocks resolve through `repro.kernels.tuning.get_block` (persistent JSON
+cache, `DEFAULT_BLOCK` fallback) when ``block`` is omitted — a pure lookup,
+safe at jit trace time.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,29 +15,54 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import layout, tuning
 from repro.kernels.acam_similarity.acam_similarity import (
-    DEFAULT_BLOCK, acam_similarity)
+    DEFAULT_BLOCK, acam_similarity, acam_similarity_classify)
 
 
-def _on_cpu() -> bool:
-    return jax.devices()[0].platform == "cpu"
+_on_cpu = tuning.interpret_mode
+_resolve = functools.partial(tuning.resolve_block, "acam_similarity")
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "block"))
 def similarity_scores(queries: jax.Array, lower: jax.Array, upper: jax.Array,
-                      *, alpha: float = 1.0, block=DEFAULT_BLOCK) -> jax.Array:
+                      *, alpha: float = 1.0, block=None) -> jax.Array:
+    block = _resolve(queries, lower.shape[0], block)
     return acam_similarity(queries, lower, upper, alpha=alpha, block=block,
                            interpret=_on_cpu())
 
 
-@functools.partial(jax.jit, static_argnames=("num_classes", "alpha", "block"))
-def classify(queries: jax.Array, lower_flat: jax.Array, upper_flat: jax.Array,
-             valid_flat: jax.Array, num_classes: int, *, alpha: float = 1.0,
-             block=DEFAULT_BLOCK) -> tuple[jax.Array, jax.Array]:
-    """Eq. 12 decision over a class-major flattened window-template bank."""
-    s = similarity_scores(queries, lower_flat, upper_flat, alpha=alpha,
-                          block=block)
+@functools.partial(jax.jit, static_argnames=("num_classes", "alpha", "block",
+                                             "interpret"))
+def _classify_two_stage(queries, lower_flat, upper_flat, valid_flat,
+                        num_classes, *, alpha, block, interpret):
+    s = acam_similarity(queries, lower_flat, upper_flat, alpha=alpha,
+                        block=block, interpret=interpret)
     s = jnp.where(valid_flat[None, :], s, -jnp.inf)
     k = lower_flat.shape[0] // num_classes
     per_class = jnp.max(s.reshape(s.shape[0], num_classes, k), axis=-1)
     return jnp.argmax(per_class, axis=-1), per_class
+
+
+def classify(queries: jax.Array, lower_flat: jax.Array, upper_flat: jax.Array,
+             valid_flat: jax.Array, num_classes: int, *, alpha: float = 1.0,
+             block=None) -> tuple[jax.Array, jax.Array]:
+    """Eq. 12 decision over a class-major flattened window-template bank."""
+    block = _resolve(queries, lower_flat.shape[0], block)
+    return _classify_two_stage(queries, lower_flat, upper_flat, valid_flat,
+                               num_classes, alpha=alpha, block=block,
+                               interpret=_on_cpu())
+
+
+def classify_fused(features: jax.Array, thresholds: jax.Array,
+                   lower_ck: jax.Array, upper_ck: jax.Array,
+                   valid_ck: jax.Array, *, alpha: float = 1.0,
+                   block=None) -> tuple[jax.Array, jax.Array]:
+    """Single-pallas_call Eq. 9-12 over a (C, K, N) window bank."""
+    c, k, n = lower_ck.shape
+    block = _resolve(features, c * k, block)
+    lo_km = layout.flatten_kmajor(lower_ck, c)
+    hi_km = layout.flatten_kmajor(upper_ck, c)
+    v_km = layout.valid_kmajor(valid_ck, c)
+    return acam_similarity_classify(features, thresholds, lo_km, hi_km, v_km,
+                                    c, alpha=alpha, block=block,
+                                    interpret=_on_cpu())

@@ -1,0 +1,60 @@
+"""Template-bank layouts shared by the fused ACAM classify kernels.
+
+The bank is stored class-major ``(C, K, N)`` (class c, template k). The fused
+binarize->match->WTA kernels need the Eq. 12 per-class max to be computable
+from *contiguous, lane-aligned* slices of the score row, so they use a
+**K-major** flattening: template row ``kk * Cp + c`` holds ``bank[c, kk]``,
+with C padded up to ``Cp`` (a lane multiple, 128). The per-class max is then
+
+    per_class = max_kk scores[:, kk*Cp : (kk+1)*Cp]          # K static slices
+
+— no strided gather, no in-kernel reshape. Padded class columns and invalid
+templates carry ``valid_row = 0`` and are driven to -inf before the max.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128
+
+
+def padded_classes(num_classes: int, lane: int = LANE) -> int:
+    return -(-num_classes // lane) * lane
+
+
+def flatten_kmajor(arr: jax.Array, num_classes: int) -> jax.Array:
+    """(C, K, N) -> (K * Cp, N), row kk*Cp + c = arr[c, kk], zero-padded."""
+    c, k, n = arr.shape
+    assert c == num_classes
+    cp = padded_classes(c)
+    out = jnp.zeros((k, cp, n), arr.dtype).at[:, :c, :].set(
+        jnp.swapaxes(arr, 0, 1))
+    return out.reshape(k * cp, n)
+
+
+def valid_kmajor(valid: jax.Array, num_classes: int) -> jax.Array:
+    """(C, K) bool -> (K * Cp,) float {0,1}; padded classes are invalid."""
+    c, k = valid.shape
+    assert c == num_classes
+    cp = padded_classes(c)
+    out = jnp.zeros((k, cp), jnp.float32).at[:, :c].set(
+        jnp.swapaxes(valid.astype(jnp.float32), 0, 1))
+    return out.reshape(k * cp)
+
+
+def wta_epilogue(scores: jax.Array, valid_row: jax.Array, cp: int,
+                 num_k: int) -> tuple[jax.Array, jax.Array]:
+    """Shared fused-kernel epilogue over K-major scores (pure jnp, runs
+    inside both classify kernels): valid mask -> Eq. 12 per-class max over
+    the K contiguous class slices -> WTA argmax.
+
+    scores: (bm, K * Cp); valid_row: (1, K * Cp) float {0,1}.
+    Returns (per_class (bm, Cp), pred (bm,) int32).
+    """
+    s = jnp.where(valid_row > 0, scores, -jnp.inf)
+    per_class = s[:, :cp]
+    for kk in range(1, num_k):
+        per_class = jnp.maximum(per_class, s[:, kk * cp:(kk + 1) * cp])
+    pred = jnp.argmax(per_class, axis=-1).astype(jnp.int32)
+    return per_class, pred

@@ -56,7 +56,8 @@ class Engine:
 
     def generate(self, requests: list[Request]) -> list[Request]:
         """Serve all requests with batched prefill + decode (greedy batching:
-        groups of `batch_size`, right-padded prompts, ragged finish)."""
+        groups of `batch_size`, left-padded prompts so the last prompt token
+        is aligned at the batch's final position, ragged finish)."""
         for i in range(0, len(requests), self.batch_size):
             self._serve_batch(requests[i : i + self.batch_size])
         return requests

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.acam_match import ops as match_ops
 from repro.kernels.acam_match.ref import acam_match_ref
