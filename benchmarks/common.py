@@ -12,7 +12,6 @@ import time
 import jax
 import numpy as np
 
-from repro.core import distill
 from repro.data import synthetic
 from repro.models import cnn
 from repro.train import cnn_trainer as T

@@ -1,0 +1,153 @@
+"""Serving-tier benchmark: the multi-tenant ACAM service under load.
+
+Sweeps tenant count x scheduler micro-batch size and measures the service
+end to end — admission, cross-tenant micro-batching (one fused classify
+dispatch per tick), the confidence cascade, and paper §V-D energy
+attribution — emitting ``BENCH_serving.json`` so the serving trajectory is
+tracked PR over PR alongside ``BENCH_kernels.json``.
+
+On this CPU container the fused kernels run in Pallas interpret mode, so
+requests/s is a correctness-path number, not a TPU number; the JSON records
+``backend``/``interpret`` to keep runs distinguishable. Escalation rate and
+nJ/request are backend-independent.
+
+BENCH_serving.json schema::
+
+    {"backend": "cpu" | "tpu",
+     "interpret": bool,
+     "entries": [
+       {"tenants": 8, "slots": 256, "requests": 1024,
+        "requests_per_s": ...,        # completed / service busy time
+        "latency_p50_ms": ..., "latency_p99_ms": ...,
+        "escalation_rate": ...,       # cascade escalations / requests
+        "nj_per_request": ...,        # E_backend (+ E_frontend if escalated)
+        "occupancy": ...,             # mean batch fill fraction
+        "classify_dispatches": ...}]}
+
+``--smoke`` restricts the sweep for CI. `run()` keeps the harness contract
+used by benchmarks/run.py: a list of ``{"name", "us_per_call", "derived"}``
+rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+TENANT_SWEEP = (1, 8, 64)
+SLOT_SWEEP = (1, 256)
+SMOKE_TENANTS = (1, 8)
+SMOKE_SLOTS = (1, 64)
+NUM_FEATURES = 64
+NUM_CLASSES = 10
+
+
+def bench_service(tenants: int, slots: int, *, requests: int | None = None,
+                  seed: int = 0) -> dict:
+    """Serve a mixed-tenant burst through a fresh service; return metrics."""
+    from repro.serve import acam_service as svc_lib
+
+    requests = requests or max(4 * slots, 128)
+    svc = svc_lib.ACAMService(
+        NUM_FEATURES,
+        config=svc_lib.ServiceConfig(slots=slots, max_queue=max(requests, 4096)))
+    protos = []
+    for t in range(tenants):
+        bank, head, p = svc_lib.make_synthetic_tenant(
+            seed * 1000 + t, num_classes=NUM_CLASSES,
+            num_features=NUM_FEATURES)
+        svc.register_tenant(f"t{t}", bank, head=head)
+        protos.append(p)
+
+    rng = np.random.RandomState(seed)
+    tenant_of = rng.randint(0, tenants, size=requests)
+    reqs = []
+    for i, t in enumerate(tenant_of):
+        feats, _ = svc_lib.sample_tenant_queries(seed + i, protos[t], 1,
+                                                 noise=0.8)
+        reqs.append(svc_lib.ClassifyRequest(f"t{t}", feats[0]))
+
+    # warmup tick compiles the fused dispatch so requests/s measures the
+    # steady state, matching how a long-lived service behaves
+    svc.serve(reqs[:1])
+    svc.reset_metrics()
+    responses = svc.serve(reqs)
+    assert len(responses) == requests
+    m = svc.metrics()
+    return {
+        "tenants": tenants,
+        "slots": slots,
+        "requests": requests,
+        "requests_per_s": m["requests_per_s"],
+        "latency_p50_ms": m["latency_p50_ms"],
+        "latency_p99_ms": m["latency_p99_ms"],
+        "escalation_rate": m["escalation_rate"],
+        "nj_per_request": m["nj_per_request"],
+        "occupancy": m["occupancy"],
+        "classify_dispatches": m["classify_dispatches"],
+    }
+
+
+def sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
+    tenant_grid = SMOKE_TENANTS if smoke else TENANT_SWEEP
+    slot_grid = SMOKE_SLOTS if smoke else SLOT_SWEEP
+    entries = []
+    for tenants in tenant_grid:
+        for slots in slot_grid:
+            requests = (2 * max(slots, 32) if smoke
+                        else max(4 * slots, 128))
+            entries.append(bench_service(tenants, slots, requests=requests,
+                                         seed=seed))
+            e = entries[-1]
+            print(f"tenants={tenants:3d} slots={slots:4d}: "
+                  f"{e['requests_per_s']:9.1f} req/s, "
+                  f"escalation {e['escalation_rate']:.3f}, "
+                  f"{e['nj_per_request']:.2f} nJ/req, "
+                  f"occupancy {e['occupancy']:.2f}")
+    return entries
+
+
+def write_bench_json(entries: list[dict],
+                     path: str = "BENCH_serving.json") -> None:
+    from repro.kernels import tuning
+
+    payload = {
+        "backend": tuning.backend(),
+        "interpret": tuning.interpret_mode(),
+        "entries": entries,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def run() -> list[dict]:
+    """benchmarks/run.py harness contract."""
+    fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+    entries = sweep(smoke=fast)
+    write_bench_json(entries)
+    return [{
+        "name": f"serving_t{e['tenants']}_s{e['slots']}",
+        "us_per_call": round(1e6 / e["requests_per_s"], 2)
+        if e["requests_per_s"] else 0.0,
+        "derived": (f"{e['requests_per_s']:.0f}req/s,"
+                    f"esc={e['escalation_rate']:.3f},"
+                    f"{e['nj_per_request']:.2f}nJ/req"),
+    } for e in entries]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: small tenant/slot grid")
+    args = ap.parse_args()
+    if args.smoke:
+        os.environ["REPRO_BENCH_FAST"] = "1"
+    for r in run():
+        print(r)
+    print("wrote BENCH_serving.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,6 @@ matching and compare accuracy + per-frame energy.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.core import hybrid, templates

@@ -1,21 +1,25 @@
-"""Batched serving demo: LM decode engine AND the hybrid ACAM classifier.
+"""Batched serving demo: LM decode engine AND the multi-tenant ACAM service.
 
 Two workloads behind one CLI:
 
   lm    (default) — admits a ragged set of token requests, batches them,
         prefills the KV cache and decodes with greedy/temperature sampling —
         the smoke-scale version of the serving path the decode_32k /
-        long_500k dry-run cells lower at production scale.
+        long_500k dry-run cells lower at production scale. Reports batch
+        fill and decode-slot utilisation, not just wall-clock totals.
 
-  acam  — serves image-classification requests through ONE end-to-end jitted
-        fused path: CNN front-end features -> fused binarize->match->WTA
-        Pallas kernel (`matching.classify_features` via
-        `hybrid.HybridClassifier.predict`). No per-request Python between
-        the feature map and the class decision; ragged request queues are
-        batched to a fixed slot count exactly like the LM engine.
+  acam  — trains the paper's CNN front-end, fits its ACAM template bank,
+        registers it as a tenant of `repro.serve.acam_service.ACAMService`
+        (optionally alongside extra synthetic tenants via --tenants), and
+        classifies the test set through the service: micro-batched
+        cross-tenant scheduling, ONE fused binarize->match->WTA Pallas
+        dispatch per tick, confidence-cascade escalation to the CNN's dense
+        head, and paper §V-D per-request energy attribution. Reports the
+        scheduler's batch-fill/occupancy stats so the coalescing quality is
+        observable.
 
     PYTHONPATH=src python examples/serve_batched.py --arch mamba2-2.7b
-    PYTHONPATH=src python examples/serve_batched.py --workload acam
+    PYTHONPATH=src python examples/serve_batched.py --workload acam --fast
 """
 import argparse
 import time
@@ -31,7 +35,8 @@ def run_lm(args) -> None:
 
     cfg = configs.get(args.arch, smoke=True)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, params, batch_size=4, max_len=128,
+    slots = 4
+    eng = Engine(cfg, params, batch_size=slots, max_len=128,
                  temperature=args.temperature)
 
     rng = np.random.RandomState(0)
@@ -41,8 +46,20 @@ def run_lm(args) -> None:
     eng.generate(reqs)
     dt = time.time() - t0
     total = sum(len(r.out) for r in reqs)
+    # batch-fill/occupancy: how full each greedy batch was, and what share
+    # of decode slot-steps produced a token (finished sequences idle their
+    # slot until the batch drains — the stat the continuous ACAM scheduler
+    # improves on)
+    n_batches = -(-len(reqs) // slots)
+    fill = len(reqs) / (n_batches * slots)
+    slot_steps = sum(
+        slots * max(len(r.out) for r in reqs[i:i + slots])
+        for i in range(0, len(reqs), slots))
+    util = total / slot_steps
     print(f"arch={cfg.name}: {len(reqs)} requests, {total} tokens "
           f"in {dt:.2f}s ({total/dt:.1f} tok/s, CPU smoke scale)")
+    print(f"  batch fill {fill:.2f} ({n_batches} batches x {slots} slots), "
+          f"decode slot utilisation {util:.2f}")
     for i, r in enumerate(reqs):
         print(f"  req{i} prompt[{len(r.prompt)}] -> {r.out}")
 
@@ -51,6 +68,7 @@ def run_acam(args) -> None:
     from repro.core import hybrid
     from repro.data import synthetic
     from repro.models import cnn
+    from repro.serve import acam_service as svc_lib
     from repro.train import cnn_trainer as T
 
     n = 80 if args.fast else 200
@@ -61,35 +79,60 @@ def run_acam(args) -> None:
     feature_fn = jax.jit(lambda p, x: cnn.student_features(p, x)[0])
     head = hybrid.fit_acam_head(lambda p, x: cnn.student_features(p, x)[0],
                                 params, gtr, tr.labels, 10, k=1)
-    clf = hybrid.HybridClassifier(params, feature_fn, head)
 
-    # ragged request queue -> fixed serving slots (continuous batching à la
-    # the LM engine: pad the tail batch instead of recompiling its shape)
+    # the trained hybrid classifier becomes tenant 0 of the service; its
+    # dense softmax head is the cascade's escalation target. --tenants adds
+    # synthetic co-tenants so the scheduler coalesces across tenants.
+    svc = svc_lib.ACAMService(
+        head.bank.num_features,
+        config=svc_lib.ServiceConfig(slots=args.batch_size,
+                                     margin_tau=args.margin_tau))
+    dense = params["head"]
+    svc.register_tenant("wearable-0", head.bank,
+                        head=(np.asarray(dense["w"]), np.asarray(dense["b"])))
+    protos = {}
+    for t in range(1, args.tenants):
+        bank, thead, p = svc_lib.make_synthetic_tenant(
+            1000 + t, num_classes=10, num_features=head.bank.num_features)
+        svc.register_tenant(f"synthetic-{t}", bank, head=thead)
+        protos[f"synthetic-{t}"] = p
+
+    # front-end feature extraction stays a batched jitted pass; the service
+    # serves the (feature-map -> class) back-end per request
     te = synthetic.load("test", n_per_class=max(n // 4, 25), seed=1)
     gte = synthetic.normalize(synthetic.to_grayscale(te.images))
+    feats = np.asarray(feature_fn(params, gte))
+
     rng = np.random.RandomState(0)
-    order = rng.permutation(len(te.labels))
-    slots = args.batch_size
-    served, correct = 0, 0
-    t_first = None
+    reqs, truth = [], []
+    for i in rng.permutation(len(te.labels)):
+        reqs.append(svc_lib.ClassifyRequest("wearable-0", feats[i]))
+        truth.append(int(te.labels[i]))
+    for tid, p in protos.items():
+        qf, qy = svc_lib.sample_tenant_queries(11, p, len(te.labels) // 4)
+        for i in range(len(qy)):
+            reqs.append(svc_lib.ClassifyRequest(tid, qf[i]))
+            truth.append(int(qy[i]))
+    if args.tenants > 1:  # interleave so micro-batches mix tenants
+        order = rng.permutation(len(reqs))
+        reqs = [reqs[i] for i in order]
+        truth = [truth[i] for i in order]
+
     t0 = time.time()
-    for i in range(0, len(order), slots):
-        idx = order[i:i + slots]
-        batch = gte[idx]
-        if len(idx) < slots:  # pad the ragged tail to the jitted slot shape
-            pad = np.zeros((slots - len(idx),) + batch.shape[1:], batch.dtype)
-            batch = np.concatenate([batch, pad], axis=0)
-        pred = np.asarray(clf.predict(batch))[:len(idx)]
-        if t_first is None:
-            t_first = time.time() - t0
-        served += len(idx)
-        correct += int((pred == te.labels[idx]).sum())
+    responses = svc.serve(reqs)
     dt = time.time() - t0
-    print(f"acam workload: {served} classifications in {dt:.2f}s "
-          f"({served/dt:.0f} img/s incl. jit; first-batch {t_first:.2f}s), "
-          f"accuracy {correct/served:.4f}")
-    print(f"  backend energy {head.energy_per_inference()*1e9:.2f} nJ/inference"
-          f" (paper Eq. 14)")
+    m = svc.metrics()
+    correct = sum(r.pred == y for r, y in zip(responses, truth))
+    print(f"acam workload: {m['completed']} classifications over "
+          f"{max(args.tenants, 1)} tenants in {dt:.2f}s "
+          f"({m['completed']/dt:.0f} req/s incl. jit), "
+          f"accuracy {correct/len(responses):.4f}")
+    print(f"  scheduler: {m['classify_dispatches']} fused dispatches, "
+          f"occupancy {m['occupancy']:.2f} "
+          f"(fill {m['min_fill']}..{m['max_fill']} of {m['slots']} slots)")
+    print(f"  cascade: escalation rate {m['escalation_rate']:.3f}, "
+          f"{m['nj_per_request']:.2f} nJ/request (accepted-at-ACAM backend "
+          f"energy {head.energy_per_inference()*1e9:.2f} nJ, paper Eq. 14)")
 
 
 def main():
@@ -100,6 +143,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--tenants", type=int, default=3,
+                    help="acam: total tenants (1 trained + N-1 synthetic)")
+    ap.add_argument("--margin-tau", type=float, default=8.0,
+                    help="acam: cascade accept threshold (match counts)")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
     (run_acam if args.workload == "acam" else run_lm)(args)

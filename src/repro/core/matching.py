@@ -12,7 +12,8 @@ Two matching models, both vectorised over (batch, class, template):
 Backend dispatch
 ----------------
 The public entry points (`feature_count_scores`, `similarity_scores`,
-`classify`, `classify_features`) route through the Pallas TPU kernels
+`classify`, `classify_features`, `classify_features_margin`) route through
+the Pallas TPU kernels
 (`repro.kernels.acam_match`, `repro.kernels.acam_similarity`) **by default**,
 falling back to interpret mode on CPU and to the pure-jnp references for
 tiny shapes. The hot (B, C, K, N) intermediate the references materialise in
@@ -301,3 +302,69 @@ def classify_features(
 def winner_take_all(per_class: Array) -> Array:
     """One-hot WTA output (the analogue WTA network's digital semantics)."""
     return jax.nn.one_hot(jnp.argmax(per_class, axis=-1), per_class.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Confidence margin (serving / hybrid cascade)
+# ---------------------------------------------------------------------------
+
+def window_margin(per_class: Array, class_lo: Array | None = None,
+                  class_hi: Array | None = None, *,
+                  cap: float) -> tuple[Array, Array]:
+    """Eq. 12 decision + winner-vs-runner-up margin inside class windows.
+
+    jnp oracle for the fused margins kernel, and the fallback used by the
+    reference/two-stage/similarity paths. ``per_class`` is (B, C) with -inf
+    for invalid classes; windows default to the full class range. Returns
+    (pred (B,) int32 global class index, margin (B,) f32 clamped to cap).
+    """
+    b, c = per_class.shape
+    if class_lo is None:
+        class_lo = jnp.zeros((b,), jnp.int32)
+    if class_hi is None:
+        class_hi = jnp.full((b,), c, jnp.int32)
+    from repro.kernels.layout import windowed_margin
+    return windowed_margin(per_class, class_lo.astype(jnp.int32)[:, None],
+                           class_hi.astype(jnp.int32)[:, None], cap)
+
+
+def classify_features_margin(
+    features: Array,
+    bank: TemplateBank,
+    class_lo: Array | None = None,
+    class_hi: Array | None = None,
+    *,
+    method: str = "feature_count",
+    alpha: float = 1.0,
+    backend: str | None = None,
+) -> tuple[Array, Array, Array]:
+    """`classify_features` + per-request confidence margin (serving path).
+
+    The margin — Eq. 12 winner vs runner-up inside the request's class
+    window ``[class_lo, class_hi)`` — is what the hybrid cascade thresholds
+    to decide accept-at-ACAM vs escalate to the CNN logits head. On the
+    kernel backend with a feature-count bank that fits the fused layout this
+    is ONE pallas_call (`acam_match_classify_margins`); other paths compute
+    per-class scores first and apply the jnp `window_margin` oracle.
+
+    Returns (pred (B,) int32 global class index, per_class (B, C),
+    margin (B,) f32 clamped to the score range: N for feature_count, 1 for
+    similarity). Empty windows (slot padding) yield pred 0, margin 0.
+    """
+    if method not in ("feature_count", "similarity"):
+        raise ValueError(f"unknown matching method {method}")
+    b, n = features.shape
+    c, k, _ = bank.templates.shape
+    cap = float(n) if method == "feature_count" else 1.0
+    if _use_kernel(b * c * k * n, backend) and method == "feature_count":
+        from repro.kernels import layout
+        from repro.kernels.acam_match import ops as match_ops
+
+        if k * layout.padded_classes(c) <= MAX_FUSED_ROWS:
+            return match_ops.classify_fused_margins(
+                features.astype(jnp.float32), bank.thresholds,
+                bank.templates, bank.valid, class_lo, class_hi)
+    _, per_class = classify_features(features, bank, method=method,
+                                     alpha=alpha, backend=backend)
+    pred, margin = window_margin(per_class, class_lo, class_hi, cap=cap)
+    return pred, per_class, margin

@@ -20,7 +20,6 @@ import time
 from dataclasses import dataclass, field
 from typing import Any
 
-import jax
 
 from repro.checkpoint.checkpointer import Checkpointer
 

@@ -23,7 +23,7 @@ resolves a tuned `(bm, bn, bk)` from its persistent JSON cache
 (``$REPRO_TUNING_CACHE``, default ``~/.cache/repro/pallas_blocks.json``,
 keyed ``kernel|backend|shape|dtype``) and falls back to `DEFAULT_BLOCK`.
 
-Two entry points:
+Three entry points:
 
   `acam_match`          -> (B, M) match-count scores (two-stage path).
   `acam_match_classify` -> fused binarize->match->valid-mask->per-class max
@@ -32,6 +32,14 @@ Two entry points:
                            Templates arrive K-major (`repro.kernels.layout`)
                            so the per-class max is K contiguous lane-aligned
                            slices of the score row.
+  `acam_match_classify_margins`
+                        -> the serving variant: same fused pipeline, plus a
+                           per-row class *window* [class_lo, class_hi) (the
+                           tenant's contiguous class range in a multi-tenant
+                           super-bank) and the Eq. 12 winner-vs-runner-up
+                           **margin** — the confidence signal the hybrid
+                           cascade thresholds to decide accept-at-ACAM vs
+                           escalate to the CNN head.
 
 `repro.core.matching` dispatches to these by default (see its docstring for
 the backend-selection API); the jnp references remain as oracles.
@@ -193,3 +201,105 @@ def acam_match_classify(features: jax.Array, thresholds: jax.Array,
         interpret=interpret,
     )(f, thr, t, vrow)
     return pred[:b, 0], per_class[:b, :num_classes]
+
+
+def _classify_margins_kernel(f_ref, thr_ref, t_ref, vrow_ref, lo_ref, hi_ref,
+                             acc_ref, pc_ref, pred_ref, margin_ref, *,
+                             nk: int, n_true: int, num_k: int, cp: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pm = jnp.where(f_ref[...] > thr_ref[...], 1.0, -1.0).astype(jnp.bfloat16)
+    t_pm = (2.0 * t_ref[...] - 1.0).astype(jnp.bfloat16)
+    acc_ref[...] += jax.lax.dot_general(
+        q_pm, t_pm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        from repro.kernels.layout import windowed_margin, wta_epilogue
+
+        np_ = float(nk * f_ref.shape[-1])
+        scores = (np_ + acc_ref[...]) * 0.5 - (np_ - n_true)
+        per_class, _ = wta_epilogue(scores, vrow_ref[...], cp, num_k)
+        pred, margin = windowed_margin(per_class, lo_ref[..., :1],
+                                       hi_ref[..., :1], float(n_true))
+        pc_ref[...] = per_class
+        pred_ref[...] = jnp.broadcast_to(pred[:, None], pred_ref.shape)
+        margin_ref[...] = jnp.broadcast_to(margin[:, None], margin_ref.shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_classes", "block", "interpret"))
+def acam_match_classify_margins(
+        features: jax.Array, thresholds: jax.Array,
+        templates_kmajor: jax.Array, valid_row: jax.Array,
+        class_lo: jax.Array, class_hi: jax.Array, num_classes: int, *,
+        block=DEFAULT_BLOCK, interpret: bool = False
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused Eq. 8 + windowed Eq. 12 + confidence margin, one pallas_call.
+
+    Operands as `acam_match_classify`, plus per-row class windows:
+
+    class_lo/class_hi: (B,) int32 — each row's decision is restricted to
+        classes ``[class_lo, class_hi)`` of the (shared, multi-tenant) bank;
+        pass 0 / num_classes for the single-tenant case.
+
+    Returns (pred (B,) int32 *global* class index, per_class (B, C) f32,
+    margin (B,) f32 winner-vs-runner-up gap clamped to N). Rows whose window
+    is empty (lo == hi, e.g. scheduler slot padding) get pred 0, margin 0.
+    """
+    b, n = features.shape
+    mk, _ = templates_kmajor.shape
+    from repro.kernels.layout import padded_classes
+    cp = padded_classes(num_classes)
+    num_k = mk // cp
+    assert num_k * cp == mk, "templates must be K-major with padded classes"
+    bm, _, bk = block
+    bp, np_ = (-(-b // bm) * bm, -(-n // bk) * bk)
+
+    f = jnp.pad(features, ((0, bp - b), (0, np_ - n)))
+    thr = jnp.pad(thresholds, (0, np_ - n), constant_values=jnp.inf)[None, :]
+    t = jnp.pad(templates_kmajor, ((0, 0), (0, np_ - n)))
+    vrow = valid_row[None, :]
+    # windows ride in lane-aligned (B, PRED_LANES) int32 carriers (col 0 is
+    # the payload); batch padding rows get the empty window [0, 0)
+    lo = jnp.broadcast_to(
+        jnp.pad(class_lo.astype(jnp.int32), (0, bp - b))[:, None],
+        (bp, PRED_LANES))
+    hi = jnp.broadcast_to(
+        jnp.pad(class_hi.astype(jnp.int32), (0, bp - b))[:, None],
+        (bp, PRED_LANES))
+
+    nk = np_ // bk
+    grid = (bp // bm, nk)
+    _, per_class, pred, margin = pl.pallas_call(
+        functools.partial(_classify_margins_kernel, nk=nk, n_true=n,
+                          num_k=num_k, cp=cp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((1, bk), lambda i, k: (0, k)),
+            pl.BlockSpec((mk, bk), lambda i, k: (0, k)),
+            pl.BlockSpec((1, mk), lambda i, k: (0, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, k: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, mk), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm, cp), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, mk), jnp.float32),  # score accumulator
+            jax.ShapeDtypeStruct((bp, cp), jnp.float32),  # per-class max
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.int32),  # WTA index
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.float32),  # margin
+        ],
+        interpret=interpret,
+    )(f, thr, t, vrow, lo, hi)
+    return pred[:b, 0], per_class[:b, :num_classes], margin[:b, 0]

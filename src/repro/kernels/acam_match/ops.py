@@ -4,7 +4,10 @@
 TPU); `classify` adds the WTA argmax epilogue (Eq. 12) with multi-template
 max-pooling, mirroring repro.core.matching.classify semantics;
 `classify_fused` is the single-pallas_call binarize->match->WTA path over a
-K-major bank layout (no (B, M) score round-trip).
+K-major bank layout (no (B, M) score round-trip); `classify_fused_margins`
+additionally returns the Eq. 12 winner-vs-runner-up confidence margin and
+accepts per-row class windows — the multi-tenant serving entry point
+(`repro.serve`).
 
 Block sizes: when ``block`` is omitted the wrapper resolves a tuned
 ``(bm, bn, bk)`` via `repro.kernels.tuning.get_block` (persistent JSON cache
@@ -20,7 +23,8 @@ import jax.numpy as jnp
 
 from repro.kernels import layout, tuning
 from repro.kernels.acam_match.acam_match import (DEFAULT_BLOCK, acam_match,
-                                                 acam_match_classify)
+                                                 acam_match_classify,
+                                                 acam_match_classify_margins)
 
 
 _on_cpu = tuning.interpret_mode
@@ -72,3 +76,29 @@ def classify_fused(features: jax.Array, thresholds: jax.Array,
     v_km = layout.valid_kmajor(valid_ck, c)
     return acam_match_classify(features, thresholds, t_km, v_km, c,
                                block=block, interpret=_on_cpu())
+
+
+def classify_fused_margins(features: jax.Array, thresholds: jax.Array,
+                           templates_ck: jax.Array, valid_ck: jax.Array,
+                           class_lo: jax.Array | None = None,
+                           class_hi: jax.Array | None = None, *,
+                           block=None) -> tuple[jax.Array, jax.Array,
+                                                jax.Array]:
+    """Return-margins variant of `classify_fused` (the serving path).
+
+    Adds per-row class windows ``[class_lo, class_hi)`` (int32 (B,); defaults
+    to the whole bank) and returns ``(pred, per_class, margin)`` where
+    ``margin`` is the Eq. 12 winner-vs-runner-up gap inside the window — the
+    confidence cascade's accept/escalate signal. Still ONE pallas_call."""
+    c, k, n = templates_ck.shape
+    b = features.shape[0]
+    if class_lo is None:
+        class_lo = jnp.zeros((b,), jnp.int32)
+    if class_hi is None:
+        class_hi = jnp.full((b,), c, jnp.int32)
+    block = _resolve(features, c * k, block)
+    t_km = layout.flatten_kmajor(templates_ck, c)
+    v_km = layout.valid_kmajor(valid_ck, c)
+    return acam_match_classify_margins(features, thresholds, t_km, v_km,
+                                       class_lo, class_hi, c, block=block,
+                                       interpret=_on_cpu())

@@ -58,3 +58,36 @@ def wta_epilogue(scores: jax.Array, valid_row: jax.Array, cp: int,
         per_class = jnp.maximum(per_class, s[:, kk * cp:(kk + 1) * cp])
     pred = jnp.argmax(per_class, axis=-1).astype(jnp.int32)
     return per_class, pred
+
+
+def windowed_margin(per_class: jax.Array, class_lo: jax.Array,
+                    class_hi: jax.Array, cap: float
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Eq. 12 decision + winner-vs-runner-up margin inside a class window.
+
+    The multi-tenant serving path stacks every tenant's classes into one
+    super-bank; each request only competes within its tenant's contiguous
+    class range ``[class_lo, class_hi)``. The margin is the confidence
+    signal of the hybrid cascade (accept-at-ACAM vs escalate to the CNN
+    head), clamped to ``cap`` (the score range: N for feature counts, 1 for
+    similarities) so a single-valid-class window reads as fully confident
+    instead of +inf.
+
+    per_class: (bm, Cp) scores (-inf for invalid/padded classes)
+    class_lo/class_hi: (bm, 1) int32 window bounds per row
+    Returns (pred (bm,) int32 global class index, margin (bm,) f32).
+    Rows with an empty window (lo == hi, e.g. batch padding) get pred 0,
+    margin 0. Pure jnp, safe inside a Pallas kernel body.
+    """
+    bm, cp = per_class.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bm, cp), 1)
+    win = (iota >= class_lo) & (iota < class_hi)
+    s = jnp.where(win, per_class, -jnp.inf)
+    top1 = jnp.max(s, axis=-1)
+    pred = jnp.argmax(s, axis=-1).astype(jnp.int32)
+    runner = jnp.where(iota == pred[:, None], -jnp.inf, s)
+    # clamp the runner-up at (top1 - cap): bounds the margin and keeps the
+    # subtraction finite when the window holds a single valid class
+    top2 = jnp.maximum(jnp.max(runner, axis=-1), top1 - cap)
+    margin = jnp.where(jnp.isfinite(top1), top1 - top2, 0.0)
+    return pred, margin.astype(jnp.float32)

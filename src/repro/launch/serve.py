@@ -1,11 +1,24 @@
-"""Serving launcher: batched generation over any zoo architecture.
+"""Serving launcher: LM decode engine OR the multi-tenant ACAM service.
 
-CPU smoke scale by default; on a real pod the same engine runs under
-`make_production_mesh()` with the `tp`/`fsdp_tp` shardings whose lowering
-the decode_32k / long_500k dry-run cells prove.
+Two workloads behind one CLI:
+
+  lm    — batched generation over any zoo architecture
+          (`repro.serve.engine.Engine`). CPU smoke scale by default; on a
+          real pod the same engine runs under `make_production_mesh()` with
+          the `tp`/`fsdp_tp` shardings whose lowering the decode_32k /
+          long_500k dry-run cells prove.
+
+  acam  — the multi-tenant hybrid-classifier service
+          (`repro.serve.acam_service.ACAMService`): per-tenant template
+          banks stacked into one super-bank, micro-batched cross-tenant
+          scheduling with ONE fused classify dispatch per tick, and the
+          confidence cascade (accept-at-ACAM vs escalate to the CNN head)
+          with paper §V-D energy attribution.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --requests 8 --max-new 16 --temperature 0.8
+  PYTHONPATH=src python -m repro.launch.serve --workload acam \
+      --tenants 8 --requests 256 --slots 64
 """
 from __future__ import annotations
 
@@ -15,22 +28,11 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
-from repro.models import lm
-from repro.serve.engine import Engine, Request
 
-
-def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--batch-size", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def run_lm(args) -> dict:
+    from repro import configs
+    from repro.models import lm
+    from repro.serve.engine import Engine, Request
 
     cfg = configs.get(args.arch, smoke=args.smoke)
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -47,6 +49,81 @@ def main(argv=None) -> dict:
     print(f"{cfg.name}: {len(reqs)} requests, {total} tokens, "
           f"{dt:.2f}s ({total / dt:.1f} tok/s)")
     return {"tokens": total, "seconds": dt}
+
+
+def run_acam(args) -> dict:
+    from repro.serve import acam_service as svc_lib
+
+    cfg = svc_lib.ServiceConfig(slots=args.slots, margin_tau=args.margin_tau)
+    svc = svc_lib.ACAMService(args.features, config=cfg)
+
+    protos = {}
+    for t in range(args.tenants):
+        bank, head, p = svc_lib.make_synthetic_tenant(
+            args.seed * 1000 + t, num_classes=args.classes,
+            num_features=args.features)
+        tid = f"tenant-{t}"
+        svc.register_tenant(tid, bank, head=head)
+        protos[tid] = p
+
+    # mixed-tenant request stream (round-robin interleave, then shuffled —
+    # every micro-batch holds several tenants)
+    rng = np.random.RandomState(args.seed)
+    reqs, truth = [], []
+    per_tenant = -(-args.requests // args.tenants)
+    for t in range(args.tenants):
+        tid = f"tenant-{t}"
+        feats, labels = svc_lib.sample_tenant_queries(
+            args.seed + 7 * t, protos[tid], per_tenant, noise=args.noise)
+        for i in range(per_tenant):
+            reqs.append(svc_lib.ClassifyRequest(tid, feats[i]))
+            truth.append(int(labels[i]))
+    order = rng.permutation(len(reqs))[:args.requests]
+    reqs = [reqs[i] for i in order]
+    truth = [truth[i] for i in order]
+
+    responses = svc.serve(reqs)
+    m = svc.metrics()
+    acc = float(np.mean([r.pred == y for r, y in zip(responses, truth)]))
+    print(f"acam service: {m['completed']} requests over {args.tenants} "
+          f"tenants, {m['classify_dispatches']} fused dispatches "
+          f"(occupancy {m['occupancy']:.2f}), accuracy {acc:.4f}")
+    print(f"  escalation rate {m['escalation_rate']:.3f} "
+          f"({m['escalated']} escalated, "
+          f"{m['escalation_dispatches']} head dispatches), "
+          f"{m['nj_per_request']:.2f} nJ/request, "
+          f"{m['requests_per_s']:.1f} req/s, "
+          f"p50 {m['latency_p50_ms']:.1f} ms / p99 {m['latency_p99_ms']:.1f} ms")
+    return {"accuracy": acc, **m}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("lm", "acam"), default="lm")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    # lm
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # acam
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=64)
+    ap.add_argument("--classes", type=int, default=10,
+                    help="classes per synthetic tenant")
+    ap.add_argument("--features", type=int, default=64,
+                    help="feature dim of the synthetic tenants")
+    ap.add_argument("--margin-tau", type=float, default=8.0,
+                    help="cascade accept threshold (match-count units)")
+    ap.add_argument("--noise", type=float, default=0.8,
+                    help="query noise (drives the escalation rate)")
+    args = ap.parse_args(argv)
+    if args.requests is None:
+        args.requests = 8 if args.workload == "lm" else 256
+    return (run_acam if args.workload == "acam" else run_lm)(args)
 
 
 if __name__ == "__main__":

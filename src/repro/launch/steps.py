@@ -7,7 +7,6 @@ ShapeDtypeStructs and the launcher can run with real arrays.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

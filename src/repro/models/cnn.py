@@ -17,7 +17,6 @@ dense head (paper §IV-B).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -15,7 +15,6 @@ Covers every feature the 10 assigned architectures need:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax

@@ -1,0 +1,418 @@
+"""Multi-tenant ACAM classification service (the hybrid cascade front door).
+
+Turns the fused Pallas classify kernel into a service tier:
+
+    submit -> admission (known tenant, feature dim, queue bound)
+           -> micro-batching scheduler (ONE fused classify dispatch per
+              tick over the registry's super-bank; `repro.serve.scheduler`)
+           -> confidence cascade: the per-request Eq. 12 winner-vs-runner-up
+              **margin** decides
+                accept-at-ACAM   (margin >= tau): charge E_backend only
+                escalate         (margin <  tau): run the tenant's CNN
+                                 logits head on the same features; charge
+                                 E_frontend + E_backend (paper §V-D via
+                                 `repro.core.energy`)
+           -> per-request `ClassifyResponse` + aggregated service metrics
+              (throughput, p50/p99 latency, escalation rate, nJ/request).
+
+Escalated slots from one tick are themselves coalesced into one dense-head
+dispatch (padded to power-of-two buckets so the escalation path compiles a
+handful of shapes, ever). Tenants without a registered head never escalate.
+
+`make_synthetic_tenant` / `sample_tenant_queries` build deterministic
+per-tenant banks + matching nearest-centroid heads without training a CNN —
+the launcher (`repro.launch.serve --workload acam`), the serving benchmark
+(`benchmarks/serving_bench.py`) and the tests all share them. For a real
+front-end, fit a bank with `repro.core.hybrid.fit_acam_head` and pass the
+model's dense head weights (see `examples/serve_batched.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as energy_lib
+from repro.core import templates
+from repro.core.templates import TemplateBank
+from repro.serve.registry import RegistryError, TemplateBankRegistry
+from repro.serve.scheduler import MicroBatchScheduler, SlotResult, WorkItem
+
+
+class AdmissionError(ValueError):
+    """Request rejected at admission (unknown tenant, bad shape, overload)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifyRequest:
+    """One classification request: a tenant's raw front-end feature map."""
+
+    tenant_id: str
+    features: np.ndarray  # (N,) float32
+
+
+@dataclasses.dataclass
+class ClassifyResponse:
+    request_id: int
+    tenant_id: str
+    pred: int  # tenant-local class id; -1 on error
+    margin: float  # Eq. 12 confidence margin at the ACAM
+    escalated: bool  # False: accepted at the ACAM back-end
+    energy_j: float  # E_backend, or E_frontend + E_backend if escalated
+    latency_s: float  # submit -> response wall time
+    error: str | None = None  # e.g. tenant evicted while the request queued
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    slots: int = 64  # scheduler micro-batch size
+    method: str = "feature_count"
+    alpha: float = 1.0
+    margin_tau: float = 8.0  # default accept threshold (score units)
+    max_queue: int = 4096  # admission bound
+    # paper §V-D energy attribution (repro.core.energy.hybrid_report defaults)
+    frontend_macs: int = 23_785_120
+    frontend_sparsity: float = 0.80
+    softmax_head_ops: int = 7_850
+    paper_faithful: bool = True
+
+
+@dataclasses.dataclass
+class _TenantRuntime:
+    margin_tau: float | None  # None: cascade disabled (no head)
+    backend_j: float  # Eq. 14 energy of this tenant's programmed rows
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Next power-of-two >= n, capped (escalation batch shape buckets)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+@jax.jit
+def _escalate_heads(w_table, b_table, feats, head_slot, n_classes):
+    """One dense-head dispatch for all escalated slots of a tick.
+
+    Gathers each slot's tenant head from the stacked table and masks class
+    columns beyond the tenant's true class count.
+    """
+    w = jnp.take(w_table, head_slot, axis=0)  # (S, N, C)
+    b = jnp.take(b_table, head_slot, axis=0)  # (S, C)
+    logits = jnp.einsum("sn,snc->sc", feats, w) + b
+    cols = jnp.arange(logits.shape[-1])[None, :]
+    logits = jnp.where(cols < n_classes[:, None], logits, -jnp.inf)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+class ACAMService:
+    """Request/response front for multi-tenant hybrid ACAM classification."""
+
+    def __init__(self, num_features: int, *,
+                 config: ServiceConfig = ServiceConfig(), k_max: int = 2,
+                 class_bucket: int = 16, backend: str | None = None):
+        self.config = config
+        self.registry = TemplateBankRegistry(
+            num_features, k_max=k_max, class_bucket=class_bucket)
+        self.scheduler = MicroBatchScheduler(
+            self.registry, slots=config.slots, method=config.method,
+            alpha=config.alpha, backend=backend)
+        self._tenants: dict[str, _TenantRuntime] = {}
+        self._head_w: np.ndarray | None = None  # (T_cap, N, C_head)
+        self._head_b: np.ndarray | None = None  # (T_cap, C_head)
+        self._head_cache: tuple[int, jnp.ndarray, jnp.ndarray] | None = None
+        self._head_gen = 0
+        self._next_id = 0
+        effective = int(round(config.frontend_macs
+                              * (1.0 - config.frontend_sparsity)))
+        effective -= config.softmax_head_ops
+        self._frontend_j = energy_lib.frontend_energy(
+            effective, paper_faithful=config.paper_faithful)
+        self._m = _Metrics()
+
+    # -- tenant lifecycle ---------------------------------------------------
+
+    def register_tenant(self, tenant_id: str, bank: TemplateBank, *,
+                        head: tuple[np.ndarray, np.ndarray] | None = None,
+                        margin_tau: float | None = None) -> None:
+        """Hot-register a tenant: templates into the super-bank, optional
+        (W, b) CNN logits head enabling the escalation path."""
+        head = self._check_head(head)  # validate BEFORE mutating the registry
+        entry = self.registry.register(tenant_id, bank)
+        self._install(tenant_id, entry.slot, entry.valid_rows, head,
+                      margin_tau)
+
+    def update_tenant(self, tenant_id: str, bank: TemplateBank, *,
+                      head: tuple[np.ndarray, np.ndarray] | None = None,
+                      margin_tau: float | None = None) -> None:
+        head = self._check_head(head)
+        entry = self.registry.update(tenant_id, bank)
+        self._install(tenant_id, entry.slot, entry.valid_rows, head,
+                      margin_tau)
+
+    def evict_tenant(self, tenant_id: str) -> None:
+        self.registry.evict(tenant_id)
+        del self._tenants[tenant_id]
+
+    def _check_head(self, head):
+        if head is None:
+            return None
+        w = np.asarray(head[0], np.float32)
+        b = np.asarray(head[1], np.float32)
+        if w.shape[0] != self.registry.num_features:
+            raise RegistryError(
+                f"head expects {w.shape[0]} features, registry serves "
+                f"{self.registry.num_features}")
+        if w.shape[1] != b.shape[0]:
+            raise RegistryError(
+                f"head shapes disagree: W {w.shape} vs b {b.shape}")
+        return w, b
+
+    def _install(self, tenant_id, slot, valid_rows, head, margin_tau):
+        if head is not None:
+            self._head_store(slot, head[0], head[1])
+        tau = self.config.margin_tau if margin_tau is None else margin_tau
+        self._tenants[tenant_id] = _TenantRuntime(
+            margin_tau=tau if head is not None else None,
+            backend_j=energy_lib.backend_energy(valid_rows,
+                                                self.registry.num_features))
+
+    def head_of(self, tenant_id: str) -> tuple[np.ndarray, np.ndarray]:
+        """The tenant's (W (N, C), b (C,)) escalation head, read back from
+        the stacked tables (the single source of truth the escalation
+        dispatch gathers from)."""
+        entry = self.registry.get(tenant_id)
+        c = entry.num_classes
+        if self._head_w is None or self._tenants[tenant_id].margin_tau is None:
+            raise RegistryError(f"tenant {tenant_id!r} has no head")
+        return (self._head_w[entry.slot, :, :c].copy(),
+                self._head_b[entry.slot, :c].copy())
+
+    def _head_store(self, slot: int, w: np.ndarray, b: np.ndarray) -> None:
+        t_cap = self.registry.capacity_tenants
+        n = self.registry.num_features
+        c = w.shape[1]
+        c_head = c if self._head_w is None else \
+            max(c, self._head_w.shape[-1])
+        if (self._head_w is None or self._head_w.shape[0] < t_cap
+                or self._head_w.shape[-1] < c_head):
+            new_w = np.zeros((t_cap, n, c_head), np.float32)
+            new_b = np.full((t_cap, c_head), -np.inf, np.float32)
+            if self._head_w is not None:
+                ow, ob = self._head_w, self._head_b
+                new_w[:ow.shape[0], :, :ow.shape[-1]] = ow
+                new_b[:ob.shape[0], :ob.shape[-1]] = ob
+            self._head_w, self._head_b = new_w, new_b
+        self._head_w[slot, :, :c] = w
+        self._head_w[slot, :, c:] = 0.0
+        self._head_b[slot, :c] = b
+        self._head_b[slot, c:] = -np.inf
+        self._head_gen += 1
+        self._head_cache = None
+
+    def _head_tables(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        if self._head_cache is None or self._head_cache[0] != self._head_gen:
+            self._head_cache = (self._head_gen, jnp.asarray(self._head_w),
+                                jnp.asarray(self._head_b))
+        return self._head_cache[1], self._head_cache[2]
+
+    # -- request path -------------------------------------------------------
+
+    def submit(self, request: ClassifyRequest) -> int:
+        """Admit one request into the scheduler queue; returns request id."""
+        if request.tenant_id not in self.registry:
+            self._m.rejected += 1
+            raise AdmissionError(f"unknown tenant {request.tenant_id!r}")
+        feats = np.asarray(request.features, np.float32).reshape(-1)
+        if feats.shape[0] != self.registry.num_features:
+            self._m.rejected += 1
+            raise AdmissionError(
+                f"expected {self.registry.num_features} features, got "
+                f"{feats.shape[0]}")
+        if self.scheduler.qsize >= self.config.max_queue:
+            self._m.rejected += 1
+            raise AdmissionError(
+                f"queue full ({self.config.max_queue} pending)")
+        self._next_id += 1
+        self.scheduler.submit(WorkItem(
+            request_id=self._next_id, tenant_id=request.tenant_id,
+            features=feats, submit_t=time.perf_counter()))
+        self._m.submitted += 1
+        return self._next_id
+
+    def step(self) -> list[ClassifyResponse]:
+        """One scheduler tick + the cascade over its results."""
+        t0 = time.perf_counter()
+        results = self.scheduler.tick()
+        if not results:
+            return []
+        escalate: list[SlotResult] = []
+        keep: list[tuple[SlotResult, bool]] = []
+        for r in results:
+            rt = self._tenants.get(r.item.tenant_id) if r.error is None \
+                else None
+            if rt is not None and rt.margin_tau is not None \
+                    and r.margin < rt.margin_tau:
+                escalate.append(r)
+                keep.append((r, True))
+            else:
+                keep.append((r, False))
+
+        esc_pred: dict[int, int] = {}
+        if escalate:
+            esc_pred = self._run_escalation(escalate)
+
+        responses = []
+        now = time.perf_counter()
+        for r, escalated in keep:
+            if r.error is not None:
+                responses.append(ClassifyResponse(
+                    request_id=r.item.request_id,
+                    tenant_id=r.item.tenant_id, pred=-1, margin=0.0,
+                    escalated=False, energy_j=0.0,
+                    latency_s=now - r.item.submit_t, error=r.error))
+                continue
+            rt = self._tenants[r.item.tenant_id]
+            pred = esc_pred[r.item.request_id] if escalated else r.pred_local
+            e = rt.backend_j + (self._frontend_j if escalated else 0.0)
+            responses.append(ClassifyResponse(
+                request_id=r.item.request_id,
+                tenant_id=r.item.tenant_id, pred=pred,
+                margin=r.margin, escalated=escalated, energy_j=e,
+                latency_s=now - r.item.submit_t))
+        self._m.record(responses, busy_s=now - t0,
+                       escalation_dispatch=bool(escalate))
+        return responses
+
+    def _run_escalation(self, escalate: list[SlotResult]) -> dict[int, int]:
+        """Coalesce a tick's escalated slots into one dense-head dispatch."""
+        n = self.registry.num_features
+        size = _bucket(len(escalate), self.config.slots)
+        feats = np.zeros((size, n), np.float32)
+        slot = np.zeros((size,), np.int32)
+        ncls = np.ones((size,), np.int32)
+        for i, r in enumerate(escalate):
+            feats[i] = r.item.features
+            slot[i] = r.entry.slot
+            ncls[i] = r.entry.num_classes
+        w_table, b_table = self._head_tables()
+        pred = np.asarray(_escalate_heads(
+            w_table, b_table, jnp.asarray(feats), jnp.asarray(slot),
+            jnp.asarray(ncls)))
+        return {r.item.request_id: int(pred[i])
+                for i, r in enumerate(escalate)}
+
+    def serve(self, requests: list[ClassifyRequest]) -> list[ClassifyResponse]:
+        """Submit a burst and run ticks until the queue drains."""
+        for req in requests:
+            self.submit(req)
+        out: list[ClassifyResponse] = []
+        while self.scheduler.qsize:
+            out.extend(self.step())
+        return out
+
+    def metrics(self) -> dict:
+        return self._m.as_dict(self.scheduler.stats)
+
+    def reset_metrics(self) -> None:
+        """Zero counters/latencies (e.g. after a warmup burst)."""
+        from repro.serve.scheduler import SchedulerStats
+
+        self._m = _Metrics()
+        self.scheduler.stats = SchedulerStats(slots=self.scheduler.slots)
+
+
+@dataclasses.dataclass
+class _Metrics:
+    submitted: int = 0
+    completed: int = 0
+    escalated: int = 0
+    rejected: int = 0
+    failed: int = 0  # served with error (e.g. tenant evicted mid-queue)
+    escalation_dispatches: int = 0
+    energy_j: float = 0.0
+    busy_s: float = 0.0
+    latencies: list = dataclasses.field(default_factory=list)
+    _MAX_LAT = 100_000  # latency reservoir bound
+
+    def record(self, responses: list[ClassifyResponse], *, busy_s: float,
+               escalation_dispatch: bool) -> None:
+        self.completed += len(responses)
+        self.failed += sum(r.error is not None for r in responses)
+        self.escalated += sum(r.escalated for r in responses)
+        self.escalation_dispatches += int(escalation_dispatch)
+        self.energy_j += sum(r.energy_j for r in responses)
+        self.busy_s += busy_s
+        if len(self.latencies) < self._MAX_LAT:
+            self.latencies.extend(r.latency_s for r in responses)
+
+    def as_dict(self, sched_stats) -> dict:
+        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
+        done = max(self.completed, 1)
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "failed": self.failed,
+            "escalated": self.escalated,
+            "escalation_rate": round(self.escalated / done, 4),
+            "escalation_dispatches": self.escalation_dispatches,
+            "requests_per_s": round(self.completed / self.busy_s, 2)
+            if self.busy_s else 0.0,
+            "latency_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "latency_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "energy_total_j": self.energy_j,
+            "nj_per_request": round(self.energy_j / done * 1e9, 4),
+            **sched_stats.as_dict(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Synthetic tenants (launcher / benchmark / test fixtures)
+# ---------------------------------------------------------------------------
+
+def make_synthetic_tenant(
+    seed: int, *, num_classes: int = 10, k: int = 1, num_features: int = 64,
+    samples_per_class: int = 24, spread: float = 0.6,
+) -> tuple[TemplateBank, tuple[np.ndarray, np.ndarray], np.ndarray]:
+    """A deterministic per-tenant classifier without training a CNN.
+
+    Draws class prototype feature maps, fits a `TemplateBank` from noisy
+    samples around them (the per-device calibration of the wearable
+    scenario), and pairs it with the matching nearest-centroid dense head
+    ``logits_c = f . p_c - |p_c|^2 / 2`` for the escalation path.
+
+    Returns (bank, (head_w (N, C), head_b (C,)), prototypes (C, N)).
+    """
+    rng = np.random.RandomState(seed)
+    protos = rng.randn(num_classes, num_features).astype(np.float32)
+    n = num_classes * samples_per_class
+    labels = np.repeat(np.arange(num_classes, dtype=np.int32),
+                       samples_per_class)
+    feats = protos[labels] + spread * rng.randn(n, num_features).astype(
+        np.float32)
+    bank = templates.generate_templates(
+        jnp.asarray(feats), jnp.asarray(labels), num_classes, k=k)
+    head_w = protos.T.astype(np.float32)  # (N, C)
+    head_b = (-0.5 * np.sum(protos**2, axis=1)).astype(np.float32)
+    return bank, (head_w, head_b), protos
+
+
+def sample_tenant_queries(
+    seed: int, protos: np.ndarray, n: int, *, noise: float = 0.8,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Draw n query feature maps around a tenant's prototypes.
+
+    `noise` controls how many land near class boundaries (and therefore how
+    often the cascade escalates). Returns (features (n, N), labels (n,)).
+    """
+    rng = np.random.RandomState(seed)
+    num_classes, num_features = protos.shape
+    labels = rng.randint(0, num_classes, size=n).astype(np.int32)
+    feats = protos[labels] + noise * rng.randn(n, num_features).astype(
+        np.float32)
+    return feats.astype(np.float32), labels

@@ -1,18 +1,35 @@
 """Batched serving engine: continuous-batching decode loop over the zoo.
 
-Requests (token prompts) are admitted into a fixed-size batch; prefill
-builds the KV/SSM cache, then a jitted decode loop samples tokens until EOS
-or max_new_tokens. Slot reuse gives continuous batching: when a sequence
-finishes, the next queued request takes its slot (prefill-on-join with the
-ragged-length mask).
+`repro.serve` hosts TWO engines for the repo's two serving workloads:
 
-This engine runs smoke configs on CPU (the examples) and production configs
-under the pod mesh (dry-run proves the lowering; see launch/serve.py).
+  * **LM decode** (this module, `Engine`) — autoregressive generation over
+    the language-model zoo. Requests (token prompts) are admitted into a
+    fixed-size batch; prefill builds the KV/SSM cache, then a jitted decode
+    loop samples tokens until EOS or max_new_tokens. Slot reuse gives
+    continuous batching: when a sequence finishes, the next queued request
+    takes its slot (prefill-on-join with the ragged-length mask). State is
+    *stateful per request* (the growing cache), so the unit of scheduling
+    is a decode step.
+
+  * **ACAM classification** (`repro.serve.acam_service.ACAMService`, with
+    `registry`/`scheduler`) — the paper's hybrid edge classifier as a
+    multi-tenant service. Requests are *stateless* single-shot feature
+    maps, so the unit of scheduling is a whole request: the micro-batching
+    scheduler coalesces requests across tenants into fixed-slot batches and
+    serves each batch with one fused binarize->match->WTA Pallas dispatch
+    over the stacked template super-bank, then the confidence cascade
+    escalates low-margin requests to the CNN logits head.
+
+Use this engine for token generation (`launch/serve.py --workload lm`,
+`examples/serve_batched.py`); use the ACAM service for classification
+traffic (`--workload acam`). Both run smoke configs on CPU (the examples)
+and production configs under the pod mesh (dry-run proves the lowering; see
+launch/serve.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -6,8 +6,7 @@ distributed trainer lives in `repro.launch.train` / `repro.distributed`.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

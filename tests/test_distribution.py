@@ -5,7 +5,6 @@ allocation). Multi-device behaviour (pjit train step on a real 8-device
 mesh, dry-run lower+compile on the 512-device production mesh) runs in
 subprocesses because XLA_FLAGS must be set before jax initialises.
 """
-import json
 import os
 import subprocess
 import sys
@@ -33,7 +32,6 @@ class TestShardingRules:
     def _specs(self, arch="tinyllama-1.1b"):
         from repro import configs
         from repro.distributed import sharding
-        from repro.launch import mesh as mesh_lib
         # spec construction needs only mesh *shape* metadata; a 1-device
         # host is enough to build an abstract 16x16 mesh? No — use the
         # abstract mesh API via make_mesh on available devices:

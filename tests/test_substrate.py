@@ -1,15 +1,9 @@
 """Substrate tests: data pipeline, optimizers, checkpointing, compression,
 fault-tolerance policies, serving engine."""
-import os
-import pathlib
-import subprocess
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_fallback import given, settings, st
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data import pipeline, synthetic
