@@ -17,6 +17,8 @@ BENCH_serving.json schema::
      "interpret": bool,
      "entries": [
        {"tenants": 8, "slots": 256, "requests": 1024,
+        "matching_backend": "default",  # or the pinned engine backend
+                                        # ("device" = RRAM-physics row)
         "requests_per_s": ...,        # completed / service busy time
         "latency_p50_ms": ..., "latency_p99_ms": ...,
         "escalation_rate": ...,       # cascade escalations / requests
@@ -45,14 +47,21 @@ NUM_CLASSES = 10
 
 
 def bench_service(tenants: int, slots: int, *, requests: int | None = None,
-                  seed: int = 0) -> dict:
-    """Serve a mixed-tenant burst through a fresh service; return metrics."""
+                  seed: int = 0, backend: str | None = None) -> dict:
+    """Serve a mixed-tenant burst through a fresh service; return metrics.
+
+    ``backend`` pins the scheduler's `repro.match` engine backend;
+    margin_tau stays in match-count units — the service converts to the
+    device backend's matchline-fraction units itself.
+    """
     from repro.serve import acam_service as svc_lib
 
     requests = requests or max(4 * slots, 128)
     svc = svc_lib.ACAMService(
         NUM_FEATURES,
-        config=svc_lib.ServiceConfig(slots=slots, max_queue=max(requests, 4096)))
+        config=svc_lib.ServiceConfig(slots=slots,
+                                     max_queue=max(requests, 4096)),
+        backend=backend)
     protos = []
     for t in range(tenants):
         bank, head, p = svc_lib.make_synthetic_tenant(
@@ -80,6 +89,7 @@ def bench_service(tenants: int, slots: int, *, requests: int | None = None,
         "tenants": tenants,
         "slots": slots,
         "requests": requests,
+        "matching_backend": backend or "default",
         "requests_per_s": m["requests_per_s"],
         "latency_p50_ms": m["latency_p50_ms"],
         "latency_p99_ms": m["latency_p99_ms"],
@@ -93,6 +103,15 @@ def bench_service(tenants: int, slots: int, *, requests: int | None = None,
 def sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
     tenant_grid = SMOKE_TENANTS if smoke else TENANT_SWEEP
     slot_grid = SMOKE_SLOTS if smoke else SLOT_SWEEP
+
+    def _report(e):
+        print(f"tenants={e['tenants']:3d} slots={e['slots']:4d} "
+              f"backend={e['matching_backend']:9s}: "
+              f"{e['requests_per_s']:9.1f} req/s, "
+              f"escalation {e['escalation_rate']:.3f}, "
+              f"{e['nj_per_request']:.2f} nJ/req, "
+              f"occupancy {e['occupancy']:.2f}")
+
     entries = []
     for tenants in tenant_grid:
         for slots in slot_grid:
@@ -100,12 +119,16 @@ def sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
                         else max(4 * slots, 128))
             entries.append(bench_service(tenants, slots, requests=requests,
                                          seed=seed))
-            e = entries[-1]
-            print(f"tenants={tenants:3d} slots={slots:4d}: "
-                  f"{e['requests_per_s']:9.1f} req/s, "
-                  f"escalation {e['escalation_rate']:.3f}, "
-                  f"{e['nj_per_request']:.2f} nJ/req, "
-                  f"occupancy {e['occupancy']:.2f}")
+            _report(entries[-1])
+    # one device-physics row: the same service stack through the RRAM-CMOS
+    # behavioural models (repro.match "device" backend), tracking how much
+    # hardware-faithful simulation costs relative to the kernel path
+    tenants, slots = tenant_grid[-1], max(slot_grid)
+    entries.append(bench_service(tenants, slots,
+                                 requests=2 * max(slots, 32) if smoke
+                                 else max(4 * slots, 128),
+                                 seed=seed, backend="device"))
+    _report(entries[-1])
     return entries
 
 
@@ -128,7 +151,9 @@ def run() -> list[dict]:
     entries = sweep(smoke=fast)
     write_bench_json(entries)
     return [{
-        "name": f"serving_t{e['tenants']}_s{e['slots']}",
+        "name": f"serving_t{e['tenants']}_s{e['slots']}"
+        + ("" if e["matching_backend"] == "default"
+           else f"_{e['matching_backend']}"),
         "us_per_call": round(1e6 / e["requests_per_s"], 2)
         if e["requests_per_s"] else 0.0,
         "derived": (f"{e['requests_per_s']:.0f}req/s,"

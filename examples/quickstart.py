@@ -10,8 +10,10 @@ import argparse
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.core import energy, hybrid
+from repro import match
+from repro.core import acam, energy, hybrid
 from repro.data import synthetic
 from repro.models import cnn
 from repro.train import cnn_trainer as T
@@ -45,6 +47,23 @@ def main():
     acc_acam = clf.accuracy(gte, te.labels)
     print(f"   ACAM feature-count accuracy: {acc_acam:.4f} "
           f"(drop {acc_soft - acc_acam:+.4f} vs softmax — paper saw -11%)")
+
+    print("== device physics: the same head through the RRAM-CMOS models")
+    feats_te = jax.jit(feature_fn)(params, gte)
+
+    def device_acc(sigma):
+        eng = match.engine_for(
+            backend="device",
+            device=acam.ACAMConfig(sigma_program=sigma), seed=7)
+        pred, _ = eng.classify_features(feats_te, head.bank)
+        return float(jnp.mean(pred == te.labels))
+
+    acc_dev = device_acc(0.0)
+    acc_noisy = device_acc(0.10)
+    print(f"   ideal array (sigma=0)      : {acc_dev:.4f} "
+          f"(matches the window model exactly)")
+    print(f"   noisy RRAM (sigma=0.10)    : {acc_noisy:.4f} "
+          f"(programming variability, §III)")
 
     print("== energy (paper §V-D arithmetic)")
     nums = energy.paper_numbers()

@@ -83,10 +83,13 @@ def run_acam(args) -> None:
     # the trained hybrid classifier becomes tenant 0 of the service; its
     # dense softmax head is the cascade's escalation target. --tenants adds
     # synthetic co-tenants so the scheduler coalesces across tenants.
+    # --backend pins the repro.match engine backend (device = RRAM physics;
+    # the service converts margin tau to matchline-fraction units itself).
     svc = svc_lib.ACAMService(
         head.bank.num_features,
         config=svc_lib.ServiceConfig(slots=args.batch_size,
-                                     margin_tau=args.margin_tau))
+                                     margin_tau=args.margin_tau),
+        backend=args.backend)
     dense = params["head"]
     svc.register_tenant("wearable-0", head.bank,
                         head=(np.asarray(dense["w"]), np.asarray(dense["b"])))
@@ -147,6 +150,10 @@ def main():
                     help="acam: total tenants (1 trained + N-1 synthetic)")
     ap.add_argument("--margin-tau", type=float, default=8.0,
                     help="acam: cascade accept threshold (match counts)")
+    ap.add_argument("--backend", default=None,
+                    choices=("auto", "kernel", "reference", "device"),
+                    help="acam: repro.match engine backend "
+                         "(device = RRAM-CMOS physics models)")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
     (run_acam if args.workload == "acam" else run_lm)(args)

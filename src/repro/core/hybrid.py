@@ -10,6 +10,12 @@ Glues together the whole paper pipeline as a deployable object:
 Also exposes `ACAMHead`, the drop-in replacement for a model's final dense
 classification layer — usable by any model in the zoo whose output is a
 small-cardinality classification (see DESIGN.md §5/§7 for applicability).
+
+All matching routes through `repro.match.MatchEngine`: the head's
+(method, alpha, backend) become an `EngineConfig`, so the same head runs
+against the jnp reference, the fused Pallas kernels, or the RRAM device-
+physics models (`backend="device"`) — and shards over the data-parallel
+mesh axes when `repro.distributed.context` holds a mesh.
 """
 from __future__ import annotations
 
@@ -19,9 +25,10 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import match as match_lib
 from repro.core import acam as acam_lib
 from repro.core import energy as energy_lib
-from repro.core import matching, quant, templates
+from repro.core import quant, templates
 
 Array = jax.Array
 
@@ -31,33 +38,34 @@ class ACAMHead(NamedTuple):
 
     Replaces `logits = features @ W + b; argmax(softmax(logits))` with
     binarise -> parallel template match -> WTA. `bank` is what gets
-    programmed once into the TXL-ACAM array.
+    programmed once into the TXL-ACAM array. `backend=None` follows the
+    process default (`repro.match.default_backend`); pin "reference" /
+    "kernel" / "device" to force one.
     """
 
     bank: templates.TemplateBank
     method: str = "feature_count"
     alpha: float = 1.0
+    backend: str | None = None
+
+    def engine(self) -> match_lib.MatchEngine:
+        """The head's matching engine (resolved default, memoised)."""
+        return match_lib.engine_for(method=self.method, alpha=self.alpha,
+                                    backend=self.backend)
 
     def __call__(self, features: Array) -> tuple[Array, Array]:
         """features: (B, N) raw front-end features -> (pred, per_class).
 
-        Executes via `matching.classify_features`: on the kernel backend
-        (the default) this is a single fused pallas_call — binarize ->
-        match -> valid mask -> Eq. 12 per-class max -> WTA — with no
-        (B, M) score round-trip through HBM.
+        On the kernel backend (the default) this is a single fused
+        pallas_call — binarize -> match -> valid mask -> Eq. 12 per-class
+        max -> WTA — with no (B, M) score round-trip through HBM.
         """
-        return matching.classify_features(
-            features, self.bank, method=self.method, alpha=self.alpha)
+        return self.engine().classify_features(features, self.bank)
 
     def scores(self, features: Array) -> Array:
+        eng = self.engine()
         q = quant.binarize(features, self.bank.thresholds)
-        if self.method == "feature_count":
-            s = matching.feature_count_scores(q, self.bank.templates, self.bank.valid)
-        else:
-            s = matching.similarity_scores(
-                q, self.bank.lower, self.bank.upper, self.bank.valid, alpha=self.alpha
-            )
-        return jnp.max(s, axis=-1)  # (B, C)
+        return jnp.max(eng.scores(q, self.bank), axis=-1)  # (B, C)
 
     def to_acam(
         self, config: acam_lib.ACAMConfig | None = None, key: Array | None = None
@@ -99,18 +107,27 @@ def fit_acam_head(
     return ACAMHead(bank=bank, method=method)
 
 
-@functools.partial(jax.jit, static_argnames=("feature_fn", "method", "alpha"))
+@functools.partial(jax.jit, static_argnames=("feature_fn", "method", "alpha",
+                                             "backend"))
 def _fused_forward(params: Any, bank: templates.TemplateBank, x: Array, *,
                    feature_fn: Callable[[Any, Array], Array], method: str,
-                   alpha: float) -> tuple[Array, Array]:
+                   alpha: float, backend: str) -> tuple[Array, Array]:
     """One end-to-end jitted graph: front-end -> fused ACAM classify.
 
-    Module-level (static feature_fn/method/alpha, bank as a pytree operand)
-    so repeated `predict`/`accuracy` calls hit the jit cache instead of
-    retracing per call.
+    Module-level (static feature_fn/method/alpha/backend, bank as a pytree
+    operand) so repeated `predict`/`accuracy` calls hit the jit cache
+    instead of retracing per call.
+
+    ``backend`` is a **static argument by design**: the caller resolves the
+    process default eagerly (`HybridClassifier.predict`), so a
+    `matching.set_backend(...)` / `match.use_backend(...)` between calls
+    keys a *different* executable — the old behaviour, where the default
+    was read at trace time and a later change could never affect an
+    already-traced graph, is gone (tested in tests/test_match_engine.py).
     """
     feats = feature_fn(params, x)
-    return matching.classify_features(feats, bank, method=method, alpha=alpha)
+    eng = match_lib.engine_for(method=method, alpha=alpha, backend=backend)
+    return eng.classify_features(feats, bank)
 
 
 class HybridClassifier(NamedTuple):
@@ -121,10 +138,13 @@ class HybridClassifier(NamedTuple):
     head: ACAMHead
 
     def predict(self, x: Array) -> Array:
+        # resolve the backend OUTSIDE the jit boundary: static argument
+        backend = self.head.backend or match_lib.default_backend()
         pred, _ = _fused_forward(self.params, self.head.bank, x,
                                  feature_fn=self.feature_fn,
                                  method=self.head.method,
-                                 alpha=self.head.alpha)
+                                 alpha=self.head.alpha,
+                                 backend=backend)
         return pred
 
     def accuracy(self, x: Array, y: Array, *, batch_size: int = 1024) -> float:

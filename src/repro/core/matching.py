@@ -1,173 +1,103 @@
-"""ACAM pattern-matching models (paper §II-D-2, Eq. 8-12).
+"""ACAM pattern matching (paper §II-D-2, Eq. 8-12) — deprecated shims.
 
-Two matching models, both vectorised over (batch, class, template):
+The matching implementation lives in **`repro.match`** (engine layer): a
+`MatchEngine` built from a hashable `EngineConfig`, a backend registry
+(`reference` jnp oracles / `kernel` Pallas fused+two-stage paths /
+`device` RRAM-CMOS physics from `repro.core.acam`), and mesh-sharded
+execution over the data-parallel axes when `repro.distributed.context`
+holds a mesh. New code should use it directly:
 
-  feature-count  S_fc(Q,T)  = sum_i 1(Q_i == T_i)                      (Eq. 8)
-  similarity     D(Q,T)     = sum_i out-of-window squared distance     (Eq. 9)
-                 H(Q,T)     = mean_i 1(T^L_i <= Q_i <= T^U_i)          (Eq. 10)
-                 S_sim(Q,T) = H / (1 + alpha * D)                      (Eq. 11)
-  decision       C(Q)       = argmax_j max_k S(Q, T_{j,k})             (Eq. 12,
-                              max over the k templates of each class)
+    from repro import match
+    eng = match.engine_for(method="feature_count", backend="kernel")
+    pred, per_class = eng.classify_features(features, bank)
 
-Backend dispatch
-----------------
-The public entry points (`feature_count_scores`, `similarity_scores`,
-`classify`, `classify_features`, `classify_features_margin`) route through
-the Pallas TPU kernels
-(`repro.kernels.acam_match`, `repro.kernels.acam_similarity`) **by default**,
-falling back to interpret mode on CPU and to the pure-jnp references for
-tiny shapes. The hot (B, C, K, N) intermediate the references materialise in
-HBM never exists on the kernel path, and `classify_features` is a *single*
-pallas_call (fused binarize -> match -> valid mask -> Eq. 12 per-class max
--> WTA argmax).
+This module keeps the historical entry points as thin delegating shims so
+existing imports, notebooks and the parity test-suite keep working:
 
-Select the backend globally with `set_backend("auto" | "kernel" |
-"reference")` or the ``REPRO_MATCHING_BACKEND`` environment variable, or
-per call via the ``backend=`` keyword:
+  feature_count_scores / similarity_scores / classify / classify_features /
+  classify_features_margin / classify_scores / winner_take_all /
+  window_margin, the `*_ref` oracles, and the TINY_ELEMENTS /
+  MAX_FUSED_ROWS dispatch constants (all resolved lazily from
+  `repro.match` — this shim must not import the engine at module level,
+  because `repro.match` itself imports `repro.core`).
 
-  auto       kernel path, except shapes with B*C*K*N < 32768 (reference)
-  kernel     always the Pallas kernels (interpret mode off-TPU)
-  reference  always the jnp references below
-
-Kernel block sizes resolve through the `repro.kernels.tuning` autotuner
-cache. The references remain exported (`feature_count_scores_ref`,
-`similarity_scores_ref`) as the parity oracles.
-
-The bank's (C, K, N) layout is flattened class-major for the two-stage
-kernels and K-major (`repro.kernels.layout`) for the fused classify, with
-`valid` masking and the Eq. 12 per-class max folded into the kernel
-epilogue.
+Backend selection
+-----------------
+`set_backend("auto" | "kernel" | "reference" | "device")` now sets the
+*process default* in `repro.match` (same as `REPRO_MATCHING_BACKEND`), and
+`use_backend(...)` scopes it to a `with` block. The old trace-time footgun
+is gone: jitted callers (`repro.core.hybrid._fused_forward`, the serving
+scheduler tick) receive the backend as a **static jit argument** resolved
+eagerly at call time, so changing the backend between calls produces a new
+trace instead of silently replaying the old one. Per-call pinning via the
+``backend=`` keyword still works and still wins over the default.
 """
 from __future__ import annotations
 
-import functools
-import os
+from typing import TYPE_CHECKING
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import quant
-from repro.core.templates import TemplateBank
+if TYPE_CHECKING:
+    from repro.core.templates import TemplateBank
 
 Array = jax.Array
 
-NEG = -jnp.inf
+NEG = -jax.numpy.inf
 
-#: below this many (B * C * K * N) cell-match operations the jnp reference
-#: beats the kernel's padding/launch overhead — stay on XLA.
-TINY_ELEMENTS = 32768
+#: names resolved lazily from repro.match on first attribute access
+#: (PEP 562) — matching <-> match would otherwise be an import cycle.
+_REEXPORTS = {
+    "TINY_ELEMENTS", "MAX_FUSED_ROWS", "classify_scores", "winner_take_all",
+    "window_margin", "feature_count_scores_ref", "similarity_scores_ref",
+    "use_backend",
+}
 
-#: fused classify keeps all K * Cp template rows VMEM-resident; past this
-#: row count fall back to the two-stage kernel path.
-MAX_FUSED_ROWS = 2048
+__all__ = sorted(_REEXPORTS | {
+    "set_backend", "get_backend", "feature_count_scores",
+    "similarity_scores", "classify", "classify_features",
+    "classify_features_margin",
+})
 
-_BACKENDS = ("auto", "kernel", "reference")
-_backend = os.environ.get("REPRO_MATCHING_BACKEND", "auto")
+
+def __getattr__(name: str):
+    if name in _REEXPORTS:
+        import repro.match as match_lib
+
+        value = getattr(match_lib, name)
+        globals()[name] = value  # cache: subsequent access is direct
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def set_backend(name: str) -> None:
-    """Select the matching backend: "auto" (default), "kernel", "reference".
+    """Set the process default backend (shim over
+    `repro.match.set_default_backend`); "auto" | any registered backend."""
+    from repro.match import set_default_backend
 
-    The selection is read at *trace time*: callers that jit around these
-    entry points (e.g. `hybrid._fused_forward`) bake the dispatch decision
-    into their jit cache, so a later `set_backend` does not retroactively
-    change already-traced executables. Pin per call with ``backend=`` (a
-    different value is a different trace) or set ``REPRO_MATCHING_BACKEND``
-    before the first call when that matters.
-    """
-    global _backend
-    if name not in _BACKENDS:
-        raise ValueError(f"unknown matching backend {name!r}; use {_BACKENDS}")
-    _backend = name
+    set_default_backend(name)
 
 
 def get_backend() -> str:
-    return _backend
+    """The process default backend name (shim)."""
+    from repro.match import default_backend
 
-
-def _use_kernel(n_elements: int, backend: str | None) -> bool:
-    b = backend or _backend
-    if b not in _BACKENDS:
-        raise ValueError(f"unknown matching backend {b!r}; use {_BACKENDS}")
-    if b == "auto":
-        return n_elements >= TINY_ELEMENTS
-    return b == "kernel"
-
-
-# ---------------------------------------------------------------------------
-# Pure-jnp references (the parity oracles; also the tiny-shape fallback)
-# ---------------------------------------------------------------------------
-
-def feature_count_scores_ref(queries: Array, templates: Array,
-                             valid: Array | None = None) -> Array:
-    """Eq. 8 reference: materialises the (B, C, K, N) comparison in HBM."""
-    eq = queries[:, None, None, :] == templates[None, :, :, :]
-    scores = jnp.sum(eq, axis=-1).astype(jnp.float32)
-    if valid is not None:
-        scores = jnp.where(valid[None, :, :], scores, NEG)
-    return scores
-
-
-def similarity_scores_ref(
-    queries: Array,
-    lower: Array,
-    upper: Array,
-    valid: Array | None = None,
-    *,
-    alpha: float = 1.0,
-) -> Array:
-    """Eq. 9-11 reference: materialises the (B, C, K, N) intermediate."""
-    q = queries[:, None, None, :]
-    lo = lower[None, :, :, :]
-    hi = upper[None, :, :, :]
-    above = jnp.maximum(q - hi, 0.0)
-    below = jnp.maximum(lo - q, 0.0)
-    d = jnp.sum(above**2 + below**2, axis=-1)  # Eq. 9
-    hit = jnp.mean((q >= lo) & (q <= hi), axis=-1)  # Eq. 10
-    s = hit / (1.0 + alpha * d)  # Eq. 11
-    if valid is not None:
-        s = jnp.where(valid[None, :, :], s, NEG)
-    return s
-
-
-# ---------------------------------------------------------------------------
-# Dispatching entry points
-# ---------------------------------------------------------------------------
-
-def _binary_thresholds(n: int) -> Array:
-    # binary {0,1} queries re-binarise exactly through a 0.5 threshold,
-    # letting the kernels' fused binarisation stage pass them through.
-    # Always float32: a bool-dtype 0.5 would collapse to True and binarise
-    # every query bit to 0.
-    return jnp.full((n,), 0.5, jnp.float32)
+    return default_backend()
 
 
 def feature_count_scores(queries: Array, templates: Array,
                          valid: Array | None = None, *,
                          backend: str | None = None) -> Array:
-    """Eq. 8 for a bank of templates.
+    """Eq. 8 for a bank of templates (shim over `MatchEngine`).
 
     queries:   (B, N) binary {0,1}
     templates: (C, K, N) binary {0,1}
     returns:   (B, C, K) match counts; invalid templates get -inf.
-
-    Dispatches to the `acam_match` Pallas kernel (exact: the bipolar-matmul
-    identity is integer-exact in f32) unless the shape is tiny or the
-    backend is pinned to "reference".
     """
-    b, n = queries.shape
-    c, k, _ = templates.shape
-    if not _use_kernel(b * c * k * n, backend):
-        return feature_count_scores_ref(queries, templates, valid)
-    from repro.kernels.acam_match import ops as match_ops
+    from repro.match import engine_for
 
-    flat = match_ops.match_scores(
-        queries.astype(jnp.float32), _binary_thresholds(n),
-        templates.reshape(c * k, n).astype(jnp.float32))
-    scores = flat.reshape(b, c, k)
-    if valid is not None:
-        scores = jnp.where(valid[None, :, :], scores, NEG)
-    return scores
+    return engine_for(backend=backend).feature_count_scores(
+        queries, templates, valid)
 
 
 def similarity_scores(
@@ -179,158 +109,56 @@ def similarity_scores(
     alpha: float = 1.0,
     backend: str | None = None,
 ) -> Array:
-    """Eq. 9-11 for a bank of window templates.
+    """Eq. 9-11 for a bank of window templates (shim over `MatchEngine`).
 
     queries:      (B, N)
     lower/upper:  (C, K, N)
     returns:      (B, C, K) similarity scores.
-
-    Dispatches to the `acam_similarity` Pallas kernel (the (B, M, N)
-    intermediate never reaches HBM) with reference fallback as above.
     """
-    b, n = queries.shape
-    c, k, _ = lower.shape
-    if not _use_kernel(b * c * k * n, backend):
-        return similarity_scores_ref(queries, lower, upper, valid,
-                                     alpha=alpha)
-    from repro.kernels.acam_similarity import ops as sim_ops
+    from repro.match import engine_for
 
-    flat = sim_ops.similarity_scores(queries, lower.reshape(c * k, n),
-                                     upper.reshape(c * k, n), alpha=alpha)
-    s = flat.reshape(b, c, k)
-    if valid is not None:
-        s = jnp.where(valid[None, :, :], s, NEG)
-    return s
-
-
-def classify_scores(scores: Array) -> tuple[Array, Array]:
-    """Eq. 12 with multi-template max-pooling.
-
-    scores: (B, C, K) -> (pred (B,), per_class (B, C)).
-    """
-    per_class = jnp.max(scores, axis=-1)
-    return jnp.argmax(per_class, axis=-1), per_class
-
-
-@functools.partial(jax.jit, static_argnames=("method", "alpha"))
-def _classify_ref(queries: Array, bank: TemplateBank, *, method: str,
-                  alpha: float) -> tuple[Array, Array]:
-    if method == "feature_count":
-        scores = feature_count_scores_ref(queries, bank.templates, bank.valid)
-    else:
-        scores = similarity_scores_ref(queries, bank.lower, bank.upper,
-                                       bank.valid, alpha=alpha)
-    return classify_scores(scores)
-
-
-def _classify_kernel_path(features: Array, thresholds: Array,
-                          bank: TemplateBank, method: str,
-                          alpha: float) -> tuple[Array, Array]:
-    """Kernel dispatch shared by `classify` and `classify_features`."""
-    from repro.kernels import layout
-    from repro.kernels.acam_match import ops as match_ops
-    from repro.kernels.acam_similarity import ops as sim_ops
-
-    c, k, n = bank.templates.shape
-    fused_rows = k * layout.padded_classes(c)
-    if method == "feature_count":
-        if fused_rows <= MAX_FUSED_ROWS:
-            return match_ops.classify_fused(features, thresholds,
-                                            bank.templates, bank.valid)
-        return match_ops.classify(features, thresholds,
-                                  bank.templates.reshape(c * k, n),
-                                  bank.valid.reshape(c * k), c)
-    if fused_rows <= MAX_FUSED_ROWS:
-        return sim_ops.classify_fused(features, thresholds, bank.lower,
-                                      bank.upper, bank.valid, alpha=alpha)
-    q = quant.binarize(features, thresholds)
-    return sim_ops.classify(q, bank.lower.reshape(c * k, n),
-                            bank.upper.reshape(c * k, n),
-                            bank.valid.reshape(c * k), c, alpha=alpha)
+    return engine_for(method="similarity", alpha=alpha,
+                      backend=backend).similarity_scores(
+        queries, lower, upper, valid)
 
 
 def classify(
     queries: Array,
-    bank: TemplateBank,
+    bank: "TemplateBank",
     *,
     method: str = "feature_count",
     alpha: float = 1.0,
     backend: str | None = None,
 ) -> tuple[Array, Array]:
-    """End-to-end Eq. 8/11 + Eq. 12. queries are *binary* feature maps.
+    """End-to-end Eq. 8/11 + Eq. 12 over *binary* queries (engine shim)."""
+    from repro.match import engine_for
 
-    On the kernel backend this executes as a single fused pallas_call
-    (binarize->match->valid mask->per-class max->WTA) when the bank fits the
-    fused layout, else as the two-stage kernel + jnp epilogue.
-    """
-    if method not in ("feature_count", "similarity"):
-        raise ValueError(f"unknown matching method {method}")
-    b, n = queries.shape
-    c, k, _ = bank.templates.shape
-    if not _use_kernel(b * c * k * n, backend):
-        return _classify_ref(queries, bank, method=method, alpha=alpha)
-    return _classify_kernel_path(queries.astype(jnp.float32),
-                                 _binary_thresholds(n), bank, method, alpha)
+    return engine_for(method=method, alpha=alpha,
+                      backend=backend).classify(queries, bank)
 
 
 def classify_features(
     features: Array,
-    bank: TemplateBank,
+    bank: "TemplateBank",
     *,
     method: str = "feature_count",
     alpha: float = 1.0,
     backend: str | None = None,
 ) -> tuple[Array, Array]:
-    """Raw front-end features -> binarize -> match -> WTA (paper Fig. 2).
+    """Raw front-end features -> binarize -> match -> WTA (engine shim).
 
-    The kernel path fuses the §II-C mean-threshold binarisation with the
-    match and the Eq. 12 decision into one pallas_call — this is what
-    `ACAMHead.__call__` executes. The reference path binarises with
-    `bank.thresholds` and reuses the jnp oracles.
+    On the kernel backend this is a single fused pallas_call when the bank
+    fits the fused layout (see `repro.match.KernelBackend`).
     """
-    if method not in ("feature_count", "similarity"):
-        raise ValueError(f"unknown matching method {method}")
-    b, n = features.shape
-    c, k, _ = bank.templates.shape
-    if not _use_kernel(b * c * k * n, backend):
-        q = quant.binarize(features, bank.thresholds)
-        return _classify_ref(q, bank, method=method, alpha=alpha)
-    return _classify_kernel_path(features, bank.thresholds, bank, method,
-                                 alpha)
+    from repro.match import engine_for
 
-
-def winner_take_all(per_class: Array) -> Array:
-    """One-hot WTA output (the analogue WTA network's digital semantics)."""
-    return jax.nn.one_hot(jnp.argmax(per_class, axis=-1), per_class.shape[-1])
-
-
-# ---------------------------------------------------------------------------
-# Confidence margin (serving / hybrid cascade)
-# ---------------------------------------------------------------------------
-
-def window_margin(per_class: Array, class_lo: Array | None = None,
-                  class_hi: Array | None = None, *,
-                  cap: float) -> tuple[Array, Array]:
-    """Eq. 12 decision + winner-vs-runner-up margin inside class windows.
-
-    jnp oracle for the fused margins kernel, and the fallback used by the
-    reference/two-stage/similarity paths. ``per_class`` is (B, C) with -inf
-    for invalid classes; windows default to the full class range. Returns
-    (pred (B,) int32 global class index, margin (B,) f32 clamped to cap).
-    """
-    b, c = per_class.shape
-    if class_lo is None:
-        class_lo = jnp.zeros((b,), jnp.int32)
-    if class_hi is None:
-        class_hi = jnp.full((b,), c, jnp.int32)
-    from repro.kernels.layout import windowed_margin
-    return windowed_margin(per_class, class_lo.astype(jnp.int32)[:, None],
-                           class_hi.astype(jnp.int32)[:, None], cap)
+    return engine_for(method=method, alpha=alpha,
+                      backend=backend).classify_features(features, bank)
 
 
 def classify_features_margin(
     features: Array,
-    bank: TemplateBank,
+    bank: "TemplateBank",
     class_lo: Array | None = None,
     class_hi: Array | None = None,
     *,
@@ -338,33 +166,15 @@ def classify_features_margin(
     alpha: float = 1.0,
     backend: str | None = None,
 ) -> tuple[Array, Array, Array]:
-    """`classify_features` + per-request confidence margin (serving path).
-
-    The margin — Eq. 12 winner vs runner-up inside the request's class
-    window ``[class_lo, class_hi)`` — is what the hybrid cascade thresholds
-    to decide accept-at-ACAM vs escalate to the CNN logits head. On the
-    kernel backend with a feature-count bank that fits the fused layout this
-    is ONE pallas_call (`acam_match_classify_margins`); other paths compute
-    per-class scores first and apply the jnp `window_margin` oracle.
+    """`classify_features` + per-request confidence margin (engine shim).
 
     Returns (pred (B,) int32 global class index, per_class (B, C),
-    margin (B,) f32 clamped to the score range: N for feature_count, 1 for
-    similarity). Empty windows (slot padding) yield pred 0, margin 0.
+    margin (B,) f32 clamped to the backend's score range: N for
+    feature_count, 1 for similarity and the device backend). Empty windows
+    (slot padding) yield pred 0, margin 0.
     """
-    if method not in ("feature_count", "similarity"):
-        raise ValueError(f"unknown matching method {method}")
-    b, n = features.shape
-    c, k, _ = bank.templates.shape
-    cap = float(n) if method == "feature_count" else 1.0
-    if _use_kernel(b * c * k * n, backend) and method == "feature_count":
-        from repro.kernels import layout
-        from repro.kernels.acam_match import ops as match_ops
+    from repro.match import engine_for
 
-        if k * layout.padded_classes(c) <= MAX_FUSED_ROWS:
-            return match_ops.classify_fused_margins(
-                features.astype(jnp.float32), bank.thresholds,
-                bank.templates, bank.valid, class_lo, class_hi)
-    _, per_class = classify_features(features, bank, method=method,
-                                     alpha=alpha, backend=backend)
-    pred, margin = window_margin(per_class, class_lo, class_hi, cap=cap)
-    return pred, per_class, margin
+    return engine_for(method=method, alpha=alpha,
+                      backend=backend).classify_features_margin(
+        features, bank, class_lo, class_hi)

@@ -19,6 +19,8 @@ Two workloads behind one CLI:
       --requests 8 --max-new 16 --temperature 0.8
   PYTHONPATH=src python -m repro.launch.serve --workload acam \
       --tenants 8 --requests 256 --slots 64
+  PYTHONPATH=src python -m repro.launch.serve --workload acam \
+      --backend device   # serve through the RRAM-CMOS physics models
 """
 from __future__ import annotations
 
@@ -54,8 +56,11 @@ def run_lm(args) -> dict:
 def run_acam(args) -> dict:
     from repro.serve import acam_service as svc_lib
 
+    # margin_tau is in match-count units for every backend: the service
+    # rescales to matchline fractions itself when backend == "device"
     cfg = svc_lib.ServiceConfig(slots=args.slots, margin_tau=args.margin_tau)
-    svc = svc_lib.ACAMService(args.features, config=cfg)
+    svc = svc_lib.ACAMService(args.features, config=cfg,
+                              backend=args.backend)
 
     protos = {}
     for t in range(args.tenants):
@@ -120,6 +125,12 @@ def main(argv=None) -> dict:
                     help="cascade accept threshold (match-count units)")
     ap.add_argument("--noise", type=float, default=0.8,
                     help="query noise (drives the escalation rate)")
+    ap.add_argument("--backend", default=None,
+                    choices=("auto", "kernel", "reference", "device"),
+                    help="repro.match engine backend for the ACAM service "
+                         "(device = RRAM-CMOS physics models; margin-tau "
+                         "is auto-rescaled to matchline-fraction units); "
+                         "default: process REPRO_MATCHING_BACKEND / auto")
     args = ap.parse_args(argv)
     if args.requests is None:
         args.requests = 8 if args.workload == "lm" else 256

@@ -1,0 +1,442 @@
+"""Matching backends: the three first-class implementations of Eq. 8-12.
+
+Every backend implements the same five entry points over a
+`TemplateBank` (or raw template arrays):
+
+  feature_count_scores(queries, templates, valid)            -> (B, C, K)
+  similarity_scores(queries, lower, upper, valid, alpha)     -> (B, C, K)
+  classify(queries, bank)              binary queries        -> (pred, per_class)
+  classify_features(features, bank)    raw features          -> (pred, per_class)
+  classify_features_margin(features, bank, lo, hi)           -> (pred, per_class, margin)
+
+Backends:
+
+  reference  pure-jnp oracles — the parity baseline and the tiny-shape
+             fast path (XLA fuses them well below the kernels' padding/
+             launch overhead).
+  kernel     the Pallas paths: fused binarize->match->valid-mask->per-class
+             max->WTA [+windowed margins] single pallas_call when the bank
+             fits VMEM (`MAX_FUSED_ROWS`), two-stage kernel + jnp epilogue
+             otherwise. Blocks resolve through the `repro.kernels.tuning`
+             autotuner unless the engine config pins them.
+  device     the RRAM-CMOS physics models from `repro.core.acam` (§III):
+             the bank is programmed into a (C*K)-row TXL array (point
+             templates become lower == upper windows), optionally with
+             log-normal `sigma_program` write noise, and scores are the
+             analogue sense-amplifier outputs. 6T4R senses the matchline
+             charge fraction, 3T1R the dual-rail survival fraction — both
+             equal the in-window fraction at sigma_program = 0, so classify
+             decisions match the reference backend exactly at zero noise
+             while scores/margins are in matchline units (cap 1.0, not N).
+             The Eq. 9 distance term is digital post-processing the
+             matchline does not integrate, so `alpha` is ignored here.
+
+Register additional backends with `register_backend(name, factory)`; the
+factory takes the `EngineConfig` so backends can read `block`, `device`,
+`seed`, ...
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import acam as acam_lib
+from repro.core import quant
+from repro.core.templates import TemplateBank
+from repro.match.config import EngineConfig
+
+Array = jax.Array
+
+NEG = -jnp.inf
+
+#: below this many (B * C * K * N) cell-match operations the jnp reference
+#: beats the kernel's padding/launch overhead — "auto" stays on XLA.
+TINY_ELEMENTS = 32768
+
+#: fused classify keeps all K * Cp template rows VMEM-resident; past this
+#: row count the kernel backend falls back to the two-stage path.
+MAX_FUSED_ROWS = 2048
+
+
+# ---------------------------------------------------------------------------
+# Shared epilogues (pure jnp)
+# ---------------------------------------------------------------------------
+
+def classify_scores(scores: Array) -> tuple[Array, Array]:
+    """Eq. 12 with multi-template max-pooling.
+
+    scores: (B, C, K) -> (pred (B,), per_class (B, C)).
+    """
+    per_class = jnp.max(scores, axis=-1)
+    return jnp.argmax(per_class, axis=-1), per_class
+
+
+def winner_take_all(per_class: Array) -> Array:
+    """One-hot WTA output (the analogue WTA network's digital semantics)."""
+    return jax.nn.one_hot(jnp.argmax(per_class, axis=-1), per_class.shape[-1])
+
+
+def window_margin(per_class: Array, class_lo: Array | None = None,
+                  class_hi: Array | None = None, *,
+                  cap: float) -> tuple[Array, Array]:
+    """Eq. 12 decision + winner-vs-runner-up margin inside class windows.
+
+    jnp oracle for the fused margins kernel, and the fallback used by the
+    reference/two-stage/similarity/device paths. ``per_class`` is (B, C)
+    with -inf for invalid classes; windows default to the full class range.
+    Returns (pred (B,) int32 global class index, margin (B,) f32 clamped to
+    cap).
+    """
+    b, c = per_class.shape
+    if class_lo is None:
+        class_lo = jnp.zeros((b,), jnp.int32)
+    if class_hi is None:
+        class_hi = jnp.full((b,), c, jnp.int32)
+    from repro.kernels.layout import windowed_margin
+    return windowed_margin(per_class, class_lo.astype(jnp.int32)[:, None],
+                           class_hi.astype(jnp.int32)[:, None], cap)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp references (the parity oracles; also the tiny-shape fast path)
+# ---------------------------------------------------------------------------
+
+def feature_count_scores_ref(queries: Array, templates: Array,
+                             valid: Array | None = None) -> Array:
+    """Eq. 8 reference: materialises the (B, C, K, N) comparison in HBM."""
+    eq = queries[:, None, None, :] == templates[None, :, :, :]
+    scores = jnp.sum(eq, axis=-1).astype(jnp.float32)
+    if valid is not None:
+        scores = jnp.where(valid[None, :, :], scores, NEG)
+    return scores
+
+
+def similarity_scores_ref(
+    queries: Array,
+    lower: Array,
+    upper: Array,
+    valid: Array | None = None,
+    *,
+    alpha: float = 1.0,
+) -> Array:
+    """Eq. 9-11 reference: materialises the (B, C, K, N) intermediate."""
+    q = queries[:, None, None, :]
+    lo = lower[None, :, :, :]
+    hi = upper[None, :, :, :]
+    above = jnp.maximum(q - hi, 0.0)
+    below = jnp.maximum(lo - q, 0.0)
+    d = jnp.sum(above**2 + below**2, axis=-1)  # Eq. 9
+    hit = jnp.mean((q >= lo) & (q <= hi), axis=-1)  # Eq. 10
+    s = hit / (1.0 + alpha * d)  # Eq. 11
+    if valid is not None:
+        s = jnp.where(valid[None, :, :], s, NEG)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Backend protocol
+# ---------------------------------------------------------------------------
+
+class MatchBackend:
+    """Base class: default implementations compose the two score entry
+    points with the shared jnp epilogues; subclasses override the hot paths
+    they can fuse."""
+
+    name = "base"
+
+    def __init__(self, config: EngineConfig):
+        self.config = config
+
+    # -- scores --------------------------------------------------------------
+
+    def feature_count_scores(self, queries: Array, templates: Array,
+                             valid: Array | None = None) -> Array:
+        raise NotImplementedError
+
+    def similarity_scores(self, queries: Array, lower: Array, upper: Array,
+                          valid: Array | None = None, *,
+                          alpha: float = 1.0) -> Array:
+        raise NotImplementedError
+
+    def scores(self, queries: Array, bank: TemplateBank) -> Array:
+        if self.config.method == "feature_count":
+            return self.feature_count_scores(queries, bank.templates,
+                                             bank.valid)
+        return self.similarity_scores(queries, bank.lower, bank.upper,
+                                      bank.valid, alpha=self.config.alpha)
+
+    # -- classify ------------------------------------------------------------
+
+    def classify(self, queries: Array, bank: TemplateBank
+                 ) -> tuple[Array, Array]:
+        """Eq. 8/11 + Eq. 12 over *binary* queries."""
+        return classify_scores(self.scores(queries, bank))
+
+    def classify_features(self, features: Array, bank: TemplateBank
+                          ) -> tuple[Array, Array]:
+        """Raw front-end features -> binarize -> match -> WTA (Fig. 2)."""
+        return self.classify(quant.binarize(features, bank.thresholds), bank)
+
+    def margin_cap(self, num_features: int) -> float:
+        """Score range the margin is clamped to (empty-runner-up guard)."""
+        return (float(num_features) if self.config.method == "feature_count"
+                else 1.0)
+
+    def classify_features_margin(
+        self, features: Array, bank: TemplateBank,
+        class_lo: Array | None = None, class_hi: Array | None = None,
+    ) -> tuple[Array, Array, Array]:
+        _, per_class = self.classify_features(features, bank)
+        pred, margin = window_margin(per_class, class_lo, class_hi,
+                                     cap=self.margin_cap(features.shape[-1]))
+        return pred, per_class, margin
+
+
+# ---------------------------------------------------------------------------
+# reference backend
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("method", "alpha"))
+def _classify_ref(queries: Array, bank: TemplateBank, *, method: str,
+                  alpha: float) -> tuple[Array, Array]:
+    if method == "feature_count":
+        scores = feature_count_scores_ref(queries, bank.templates, bank.valid)
+    else:
+        scores = similarity_scores_ref(queries, bank.lower, bank.upper,
+                                       bank.valid, alpha=alpha)
+    return classify_scores(scores)
+
+
+class ReferenceBackend(MatchBackend):
+    name = "reference"
+
+    def feature_count_scores(self, queries, templates, valid=None):
+        return feature_count_scores_ref(queries, templates, valid)
+
+    def similarity_scores(self, queries, lower, upper, valid=None, *,
+                          alpha=1.0):
+        return similarity_scores_ref(queries, lower, upper, valid,
+                                     alpha=alpha)
+
+    def classify(self, queries, bank):
+        return _classify_ref(queries, bank, method=self.config.method,
+                             alpha=self.config.alpha)
+
+
+# ---------------------------------------------------------------------------
+# kernel backend (Pallas)
+# ---------------------------------------------------------------------------
+
+def _binary_thresholds(n: int) -> Array:
+    # binary {0,1} queries re-binarise exactly through a 0.5 threshold,
+    # letting the kernels' fused binarisation stage pass them through.
+    # Always float32: a bool-dtype 0.5 would collapse to True and binarise
+    # every query bit to 0.
+    return jnp.full((n,), 0.5, jnp.float32)
+
+
+class KernelBackend(MatchBackend):
+    name = "kernel"
+
+    def feature_count_scores(self, queries, templates, valid=None):
+        from repro.kernels.acam_match import ops as match_ops
+
+        b, n = queries.shape
+        c, k, _ = templates.shape
+        flat = match_ops.match_scores(
+            queries.astype(jnp.float32), _binary_thresholds(n),
+            templates.reshape(c * k, n).astype(jnp.float32),
+            block=self.config.block)
+        scores = flat.reshape(b, c, k)
+        if valid is not None:
+            scores = jnp.where(valid[None, :, :], scores, NEG)
+        return scores
+
+    def similarity_scores(self, queries, lower, upper, valid=None, *,
+                          alpha=1.0):
+        from repro.kernels.acam_similarity import ops as sim_ops
+
+        b, n = queries.shape
+        c, k, _ = lower.shape
+        flat = sim_ops.similarity_scores(queries, lower.reshape(c * k, n),
+                                         upper.reshape(c * k, n),
+                                         alpha=alpha, block=self.config.block)
+        s = flat.reshape(b, c, k)
+        if valid is not None:
+            s = jnp.where(valid[None, :, :], s, NEG)
+        return s
+
+    def _classify_kernel_path(self, features: Array, thresholds: Array,
+                              bank: TemplateBank) -> tuple[Array, Array]:
+        """Fused single-pallas_call when the bank fits VMEM, else two-stage."""
+        from repro.kernels import layout
+        from repro.kernels.acam_match import ops as match_ops
+        from repro.kernels.acam_similarity import ops as sim_ops
+
+        method, alpha, block = (self.config.method, self.config.alpha,
+                                self.config.block)
+        c, k, n = bank.templates.shape
+        fused_rows = k * layout.padded_classes(c)
+        if method == "feature_count":
+            if fused_rows <= MAX_FUSED_ROWS:
+                return match_ops.classify_fused(features, thresholds,
+                                                bank.templates, bank.valid,
+                                                block=block)
+            return match_ops.classify(features, thresholds,
+                                      bank.templates.reshape(c * k, n),
+                                      bank.valid.reshape(c * k), c,
+                                      block=block)
+        if fused_rows <= MAX_FUSED_ROWS:
+            return sim_ops.classify_fused(features, thresholds, bank.lower,
+                                          bank.upper, bank.valid, alpha=alpha,
+                                          block=block)
+        q = quant.binarize(features, thresholds)
+        return sim_ops.classify(q, bank.lower.reshape(c * k, n),
+                                bank.upper.reshape(c * k, n),
+                                bank.valid.reshape(c * k), c, alpha=alpha,
+                                block=block)
+
+    def classify(self, queries, bank):
+        n = queries.shape[-1]
+        return self._classify_kernel_path(queries.astype(jnp.float32),
+                                          _binary_thresholds(n), bank)
+
+    def classify_features(self, features, bank):
+        return self._classify_kernel_path(features, bank.thresholds, bank)
+
+    def classify_features_margin(self, features, bank, class_lo=None,
+                                 class_hi=None):
+        from repro.kernels import layout
+        from repro.kernels.acam_match import ops as match_ops
+
+        c, k, n = bank.templates.shape
+        if (self.config.method == "feature_count"
+                and k * layout.padded_classes(c) <= MAX_FUSED_ROWS):
+            # ONE pallas_call: binarize -> match -> per-class max -> WTA
+            # -> windowed winner-vs-runner-up margin
+            return match_ops.classify_fused_margins(
+                features.astype(jnp.float32), bank.thresholds,
+                bank.templates, bank.valid, class_lo, class_hi,
+                block=self.config.block)
+        return super().classify_features_margin(features, bank, class_lo,
+                                                class_hi)
+
+
+# ---------------------------------------------------------------------------
+# device backend (RRAM-CMOS physics, repro.core.acam)
+# ---------------------------------------------------------------------------
+
+class DeviceBackend(MatchBackend):
+    """Matching through the §III TXL-ACAM behavioural models.
+
+    The bank is flattened class-major into a (C*K, N) array and *programmed*
+    (`acam.program`): point templates become degenerate lower == upper
+    windows, window templates keep their bounds. `sigma_program > 0` applies
+    the log-normal RRAM write noise, keyed by the engine config's seed, so
+    noisy-hardware accuracy/energy sweeps run through the exact same API as
+    the ideal backends. Scores are `acam.sense` outputs — the matchline
+    charge fraction (6T4R) or dual-rail survival fraction (3T1R) — in [0, 1]
+    matchline units (margins cap at 1.0, not N).
+    """
+
+    name = "device"
+
+    def __init__(self, config: EngineConfig):
+        super().__init__(config)
+        self.acam_config = config.device or acam_lib.ACAMConfig()
+
+    def _program_rows(self, lower: Array, upper: Array,
+                      valid_flat: Array) -> acam_lib.ProgrammedACAM:
+        key = None
+        if self.acam_config.sigma_program > 0.0:
+            key = jax.random.PRNGKey(self.config.seed)
+        return acam_lib.program(lower, upper, valid_flat, self.acam_config,
+                                key)
+
+    def program_bank(self, bank: TemplateBank) -> acam_lib.ProgrammedACAM:
+        """The acam.py bridge: bank -> programmed (C*K, N) TXL array.
+
+        Public so calibration flows (`acam.calibrate_windows`,
+        `acam.soft_sense` gradients) can reach the exact array the engine
+        matches against.
+        """
+        c, k, n = bank.templates.shape
+        if self.config.method == "feature_count":
+            lo = hi = bank.templates.reshape(c * k, n)
+        else:
+            lo = bank.lower.reshape(c * k, n)
+            hi = bank.upper.reshape(c * k, n)
+        return self._program_rows(lo, hi, bank.valid.reshape(c * k))
+
+    def _sense_rows(self, prog: acam_lib.ProgrammedACAM, queries: Array,
+                    c: int, k: int) -> Array:
+        s = acam_lib.sense(prog, queries)  # (B, C*K), invalid rows -> -inf
+        return s.reshape(queries.shape[0], c, k)
+
+    def feature_count_scores(self, queries, templates, valid=None):
+        c, k, n = templates.shape
+        flat = templates.reshape(c * k, n)
+        v = (valid if valid is not None
+             else jnp.ones((c, k), bool)).reshape(c * k)
+        return self._sense_rows(self._program_rows(flat, flat, v), queries,
+                                c, k)
+
+    def similarity_scores(self, queries, lower, upper, valid=None, *,
+                          alpha=1.0):
+        # alpha (the Eq. 9/11 distance weight) is digital post-processing
+        # the analogue matchline does not integrate: the device senses the
+        # Eq. 10 in-window fraction H only.
+        del alpha
+        c, k, n = lower.shape
+        v = (valid if valid is not None
+             else jnp.ones((c, k), bool)).reshape(c * k)
+        prog = self._program_rows(lower.reshape(c * k, n),
+                                  upper.reshape(c * k, n), v)
+        return self._sense_rows(prog, queries, c, k)
+
+    def scores(self, queries, bank):
+        c, k, _ = bank.templates.shape
+        return self._sense_rows(self.program_bank(bank), queries, c, k)
+
+    def margin_cap(self, num_features: int) -> float:
+        return 1.0  # sense outputs live in [0, 1] matchline units
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[EngineConfig], MatchBackend]] = {
+    "reference": ReferenceBackend,
+    "kernel": KernelBackend,
+    "device": DeviceBackend,
+}
+
+
+def register_backend(name: str,
+                     factory: Callable[[EngineConfig], MatchBackend]) -> None:
+    """Add (or replace) a backend. `factory(config)` -> MatchBackend."""
+    if name == "auto":
+        raise ValueError('"auto" is the engine dispatch policy, '
+                         "not a backend name")
+    _REGISTRY[name] = factory
+    backend_for.cache_clear()  # a replaced factory must not serve stale hits
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+@functools.lru_cache(maxsize=None)
+def backend_for(name: str, config: EngineConfig) -> MatchBackend:
+    """Memoised backend instance per (name, config) — backends are
+    stateless value objects, so sharing them keeps jit caches shared too."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown matching backend {name!r}; use "
+                         f"{('auto',) + backend_names()}") from None
+    return factory(config)

@@ -1,0 +1,267 @@
+"""The matching engine: one API over the backend registry + mesh sharding.
+
+`MatchEngine` is the single entry point every production caller
+(`repro.core.hybrid`, `repro.serve.*`, `repro.launch.serve`, the
+benchmarks and examples) routes Eq. 8-12 template matching through:
+
+    eng = engine_for(method="feature_count", backend="kernel")
+    pred, per_class = eng.classify_features(features, bank)
+
+Construction is cheap and memoised per `EngineConfig` (`engine_for`), and
+every method is safe to call at jit trace time: backend resolution is a
+pure dict lookup, block resolution is the `repro.kernels.tuning` cached
+lookup, and the "auto" policy decides reference-vs-kernel from static
+shapes only.
+
+Backend defaults
+----------------
+The process default backend (what `backend=None` / an omitted engine
+backend resolves to) is ``REPRO_MATCHING_BACKEND`` at import, "auto"
+otherwise. `set_default_backend` changes it; `use_backend("...")` scopes a
+change to a `with` block (tests / env parity). Unlike the old
+`repro.core.matching._backend` global, the default is only ever read
+*eagerly at the caller boundary* — jitted callers receive the backend as a
+static argument (`hybrid._fused_forward`, the scheduler tick), so changing
+the default triggers a fresh trace instead of being silently baked into an
+existing executable.
+
+Mesh sharding
+-------------
+When `repro.distributed.context` holds a mesh (set by a launcher), engine
+calls whose batch divides the data-parallel device count execute under
+`jax.shard_map`: queries/features (and per-row class windows) are sharded
+over the dp axes, the template bank is replicated, and each device runs
+the backend on its batch shard — the template-matching batch dimension is
+embarrassingly parallel, so results are bit-identical to single-device
+execution. Callers that jit around the engine bake the mesh decision into
+their trace; launchers must install the mesh before the first call (the
+same contract as `context.constrain`).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import math
+import os
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.templates import TemplateBank
+from repro.match import backends as backends_lib
+from repro.match.backends import TINY_ELEMENTS, backend_for, backend_names
+from repro.match.config import EngineConfig, validate
+
+Array = jax.Array
+
+_default_backend = os.environ.get("REPRO_MATCHING_BACKEND", "auto")
+
+
+def default_backend() -> str:
+    """The process default backend name ("auto" unless overridden)."""
+    return _default_backend
+
+
+def set_default_backend(name: str) -> None:
+    """Set the process default backend ("auto" or any registered name).
+
+    Read eagerly by callers (never inside traced code): jitted entry points
+    take the resolved name as a static argument, so a change here produces
+    a new trace on the next call rather than mutating a compiled one.
+    """
+    global _default_backend
+    if name != "auto" and name not in backend_names():
+        raise ValueError(f"unknown matching backend {name!r}; use "
+                         f"{('auto',) + backend_names()}")
+    _default_backend = name
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scope the default backend to a `with` block (tests / env parity)."""
+    prev = default_backend()
+    set_default_backend(name)
+    try:
+        yield
+    finally:
+        set_default_backend(prev)
+
+
+# ---------------------------------------------------------------------------
+# Mesh plumbing
+# ---------------------------------------------------------------------------
+
+def dp_axes_in_mesh():
+    """(mesh, dp_axes) from the distributed context, or (None, None) when
+    no usable data-parallel mesh is installed."""
+    from repro.distributed import context
+
+    mesh = context.get_mesh()
+    axes = context.get()
+    if mesh is None or axes is None:
+        return None, None
+    dp = axes.dp if isinstance(axes.dp, tuple) else (axes.dp,)
+    if any(a not in mesh.axis_names for a in dp):
+        return None, None
+    if math.prod(mesh.shape[a] for a in dp) <= 1:
+        return None, None
+    return mesh, dp
+
+
+def batch_specs(dp, n_batch_args: int, out_ranks: tuple[int, ...]):
+    """shard_map specs for a matching call: batch-leading operands sharded
+    over the dp axes, the bank replicated, outputs batch-leading.
+
+    Exposed for tests: the first `n_batch_args` in_specs carry P(dp) — the
+    queries ARE dp-sharded — and the bank spec is P().
+    """
+    in_specs = tuple(P(dp) for _ in range(n_batch_args)) + (P(),)
+    out_specs = tuple(P(dp, *([None] * (r - 1))) for r in out_ranks)
+    return in_specs, out_specs
+
+
+class MatchEngine:
+    """Pluggable, mesh-aware Eq. 8-12 matching over a `TemplateBank`."""
+
+    def __init__(self, config: EngineConfig = EngineConfig()):
+        validate(config, backend_names())
+        self.config = config
+
+    def __repr__(self) -> str:
+        return f"MatchEngine({self.config!r})"
+
+    # -- backend resolution --------------------------------------------------
+
+    def backend(self, n_elements: int | None = None) -> backends_lib.MatchBackend:
+        """Resolve the backend ("auto" -> reference for tiny shapes)."""
+        name = self.config.backend
+        if name == "auto":
+            name = ("reference" if n_elements is not None
+                    and n_elements < TINY_ELEMENTS else "kernel")
+        return backend_for(name, self.config)
+
+    # -- sharded execution ---------------------------------------------------
+
+    def _run(self, fn, batch_args: tuple, bank, out_ranks: tuple[int, ...]):
+        """Run `fn(*batch_args, bank)`, shard_map-ed over the dp mesh axes
+        when one is installed and the batch divides the device count."""
+        mesh, dp = dp_axes_in_mesh()
+        b = batch_args[0].shape[0]
+        if mesh is None or b % math.prod(mesh.shape[a] for a in dp):
+            return fn(*batch_args, bank)
+        in_specs, out_specs = batch_specs(dp, len(batch_args), out_ranks)
+        # check_rep=False: pallas_call has no replication rule; the bank is
+        # replicated by construction and outputs are purely batch-local.
+        sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False)
+        return sharded(*batch_args, bank)
+
+    # -- raw score entry points (template arrays, not banks) -----------------
+
+    def feature_count_scores(self, queries: Array, templates: Array,
+                             valid: Array | None = None) -> Array:
+        """Eq. 8: queries (B, N) binary, templates (C, K, N) -> (B, C, K)."""
+        b, n = queries.shape
+        c, k, _ = templates.shape
+        be = self.backend(b * c * k * n)
+        return be.feature_count_scores(queries, templates, valid)
+
+    def similarity_scores(self, queries: Array, lower: Array, upper: Array,
+                          valid: Array | None = None) -> Array:
+        """Eq. 9-11: queries (B, N), windows (C, K, N) -> (B, C, K)."""
+        b, n = queries.shape
+        c, k, _ = lower.shape
+        be = self.backend(b * c * k * n)
+        return be.similarity_scores(queries, lower, upper, valid,
+                                    alpha=self.config.alpha)
+
+    # -- bank entry points ---------------------------------------------------
+
+    def _elements(self, batch: int, bank: TemplateBank) -> int:
+        c, k, n = bank.templates.shape
+        return batch * c * k * n
+
+    def scores(self, queries: Array, bank: TemplateBank) -> Array:
+        """(B, C, K) scores for the configured method; invalid rows -inf."""
+        be = self.backend(self._elements(queries.shape[0], bank))
+
+        def fn(q, bk):
+            # 1-tuple so the output pytree matches _run's out_specs tuple
+            # (shard_map requires structural agreement, not a bare array)
+            return (be.scores(q, bk),)
+
+        return self._run(fn, (queries,), bank, (3,))[0]
+
+    def classify(self, queries: Array, bank: TemplateBank
+                 ) -> tuple[Array, Array]:
+        """Eq. 8/11 + Eq. 12 over *binary* queries -> (pred, per_class)."""
+        be = self.backend(self._elements(queries.shape[0], bank))
+        return self._run(be.classify, (queries,), bank, (1, 2))
+
+    def classify_features(self, features: Array, bank: TemplateBank
+                          ) -> tuple[Array, Array]:
+        """Raw features -> binarize -> match -> WTA -> (pred, per_class).
+
+        The kernel backend executes this as a single fused pallas_call when
+        the bank fits the fused layout.
+        """
+        be = self.backend(self._elements(features.shape[0], bank))
+        return self._run(be.classify_features, (features,), bank, (1, 2))
+
+    def classify_features_margin(
+        self, features: Array, bank: TemplateBank,
+        class_lo: Array | None = None, class_hi: Array | None = None,
+    ) -> tuple[Array, Array, Array]:
+        """`classify_features` + per-request confidence margin (serving).
+
+        Returns (pred (B,) int32 global class index, per_class (B, C),
+        margin (B,) f32 clamped to the backend's score range). Empty class
+        windows (slot padding) yield pred 0, margin 0.
+        """
+        import jax.numpy as jnp
+
+        b = features.shape[0]
+        c = bank.templates.shape[0]
+        if class_lo is None:
+            class_lo = jnp.zeros((b,), jnp.int32)
+        if class_hi is None:
+            class_hi = jnp.full((b,), c, jnp.int32)
+        be = self.backend(self._elements(b, bank))
+
+        def fn(feats, lo, hi, bk):
+            return be.classify_features_margin(feats, bk, lo, hi)
+
+        return self._run(fn, (features, class_lo, class_hi), bank, (1, 2, 1))
+
+    def __call__(self, features: Array, bank: TemplateBank,
+                 class_lo: Array | None = None,
+                 class_hi: Array | None = None):
+        """Config-directed forward: margins when `config.margin` is set."""
+        if self.config.margin:
+            return self.classify_features_margin(features, bank, class_lo,
+                                                 class_hi)
+        return self.classify_features(features, bank)
+
+
+@functools.lru_cache(maxsize=None)
+def _engine_for(config: EngineConfig) -> MatchEngine:
+    return MatchEngine(config)
+
+
+def engine_for(method: str = "feature_count", alpha: float = 1.0,
+               backend: str | None = None,
+               block: tuple[int, int, int] | None = None,
+               margin: bool = False, device=None, seed: int = 0
+               ) -> MatchEngine:
+    """Memoised engine per config; `backend=None` -> the process default.
+
+    The default is resolved HERE (eagerly, at the caller boundary), so a
+    jitted caller that passes the resolved `engine.config` — or the backend
+    name — as a static argument re-traces when the default changes.
+    """
+    cfg = EngineConfig(method=method, alpha=alpha,
+                       backend=backend or default_backend(),
+                       block=None if block is None else tuple(block),
+                       margin=margin, device=device, seed=seed)
+    return _engine_for(cfg)

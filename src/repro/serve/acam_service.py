@@ -71,7 +71,11 @@ class ServiceConfig:
     slots: int = 64  # scheduler micro-batch size
     method: str = "feature_count"
     alpha: float = 1.0
-    margin_tau: float = 8.0  # default accept threshold (score units)
+    #: cascade accept threshold, always in match-count units (0..N). The
+    #: device-physics backend senses matchline *fractions* (0..1) — the
+    #: service rescales tau by 1/N automatically when constructed with
+    #: backend="device", so callers never convert units themselves.
+    margin_tau: float = 8.0
     max_queue: int = 4096  # admission bound
     # paper §V-D energy attribution (repro.core.energy.hybrid_report defaults)
     frontend_macs: int = 23_785_120
@@ -115,7 +119,21 @@ class ACAMService:
     def __init__(self, num_features: int, *,
                  config: ServiceConfig = ServiceConfig(), k_max: int = 2,
                  class_bucket: int = 16, backend: str | None = None):
+        """``backend`` pins the scheduler's `repro.match` engine backend
+        ("reference" | "kernel" | "device" | "auto"); None resolves the
+        process default ONCE, here — pinning it keeps the margin units and
+        the served backend consistent for the service's lifetime even if
+        the process default changes later. "device" serves every tick
+        through the RRAM-CMOS physics models — margins are then matchline
+        fractions, and every margin_tau (config default and per-tenant
+        overrides, given in match-count units) is rescaled by
+        1/num_features here."""
+        from repro import match as match_lib
+
         self.config = config
+        backend = backend or match_lib.default_backend()
+        # device margins are count/N fractions: convert count-unit taus
+        self._tau_scale = 1.0 / num_features if backend == "device" else 1.0
         self.registry = TemplateBankRegistry(
             num_features, k_max=k_max, class_bucket=class_bucket)
         self.scheduler = MicroBatchScheduler(
@@ -176,6 +194,7 @@ class ACAMService:
         if head is not None:
             self._head_store(slot, head[0], head[1])
         tau = self.config.margin_tau if margin_tau is None else margin_tau
+        tau *= self._tau_scale
         self._tenants[tenant_id] = _TenantRuntime(
             margin_tau=tau if head is not None else None,
             backend_j=energy_lib.backend_energy(valid_rows,

@@ -25,9 +25,12 @@ rebuilt lazily (`device_bank`, `thresholds_table`) and cached per
 "one bank gather per tick" stays a gather, not a transfer.
 
 The fused margins kernel keeps all ``K_max * padded_classes(C_cap)``
-template rows VMEM-resident; past `repro.core.matching.MAX_FUSED_ROWS` the
-dispatch layer automatically falls back to the two-stage kernel + jnp
-margin epilogue — same semantics, still one dispatch per tick.
+template rows VMEM-resident; past `repro.match.MAX_FUSED_ROWS` the kernel
+backend automatically falls back to the two-stage kernel + jnp margin
+epilogue — same semantics, still one dispatch per tick. The scheduler's
+dispatch routes through `repro.match.MatchEngine`, so the same super-bank
+also serves the `reference` and `device` (RRAM-physics) backends and
+shards over the data-parallel mesh axes when one is installed.
 """
 from __future__ import annotations
 

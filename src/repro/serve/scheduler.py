@@ -7,9 +7,10 @@ served by ONE fused classify dispatch per tick:
            -> one gather of per-slot tenant threshold rows (the bank gather)
            -> shift features so the shared zero-threshold binarisation is
               correct per tenant
-           -> one `matching.classify_features_margin` call over the
-              registry's super-bank with per-slot class windows
-              (`[offset, offset + C)` — Eq. 12 never crosses tenants)
+           -> one `repro.match.MatchEngine.classify_features_margin` call
+              over the registry's super-bank with per-slot class windows
+              (`[offset, offset + C)` — Eq. 12 never crosses tenants),
+              dp-mesh-sharded by the engine when a mesh is installed
            -> per-slot tenant-local predictions + confidence margins
 
 The batch shape is pinned to ``slots`` (ragged tails are padded with empty
@@ -34,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import matching
+from repro import match as match_lib
 from repro.serve.registry import TemplateBankRegistry, TenantEntry
 
 
@@ -105,16 +106,22 @@ class SchedulerStats:
 
 @functools.partial(jax.jit, static_argnames=("method", "alpha", "backend"))
 def _batched_classify(bank, thr_table, feats, tenant_slot, class_lo, class_hi,
-                      *, method: str, alpha: float, backend: str | None):
+                      *, method: str, alpha: float, backend: str):
     """The whole tick on device: ONE threshold-row gather + ONE fused
-    classify-with-margins dispatch over the multi-tenant super-bank."""
+    classify-with-margins dispatch over the multi-tenant super-bank.
+
+    ``backend`` is a *static* argument resolved eagerly by `tick()` (never
+    the process default read at trace time), so switching backends between
+    ticks re-traces instead of replaying a stale executable. The engine
+    shards the batch over the data-parallel mesh axes when
+    `repro.distributed.context` holds a mesh (fixed ``slots`` batches
+    divide the dp device count or fall back to single-device)."""
     thr_rows = jnp.take(thr_table, tenant_slot, axis=0)  # the bank gather
     # per-tenant thresholds -> shared zero threshold: binarize(f, thr_t)
     # == binarize(f - thr_t, 0), and the super-bank's thresholds are zeros
     shifted = feats - thr_rows
-    return matching.classify_features_margin(
-        shifted, bank, class_lo, class_hi, method=method, alpha=alpha,
-        backend=backend)
+    eng = match_lib.engine_for(method=method, alpha=alpha, backend=backend)
+    return eng.classify_features_margin(shifted, bank, class_lo, class_hi)
 
 
 class MicroBatchScheduler:
@@ -175,7 +182,7 @@ class MicroBatchScheduler:
             self.registry.device_bank(), self.registry.thresholds_table(),
             jnp.asarray(feats), jnp.asarray(slot_idx), jnp.asarray(lo),
             jnp.asarray(hi), method=self.method, alpha=self.alpha,
-            backend=self.backend)
+            backend=self.backend or match_lib.default_backend())
         pred = np.asarray(pred)
         margin = np.asarray(margin)
         self.stats.record_tick(len(batch))

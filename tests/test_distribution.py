@@ -20,7 +20,10 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 def run_sub(code: str, timeout=600) -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # pin the CPU platform: without it jax probes the TPU runtime in this
+    # container and stalls ~7 minutes per subprocess before falling back.
+    # XLA_FLAGS (forced host device count) still applies under cpu.
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                          capture_output=True, text=True, timeout=timeout,
                          env=env)
