@@ -17,6 +17,12 @@ BENCH_kernels.json schema::
      "entries": [
        {"kernel": "acam_match",    # | acam_similarity | *_classify_fused
                                    # | acam_device_classify (RRAM physics)
+                                   # | acam_match_classify_sharded
+                                   #   (bank rows sharded over the model
+                                   #   axis; ref_us = replicated engine,
+                                   #   kernel_us = sharded engine, extra
+                                   #   "bank_sharding" field — rows appear
+                                   #   only under REPRO_FORCE_MESH)
         "b": 256, "m": 10, "n": 784,
         "ref_us": 123.4,           # jnp reference, us/call
         "kernel_us": 456.7,        # timed engine backend (pallas kernels,
@@ -42,6 +48,12 @@ import argparse
 import json
 import os
 import time
+
+from repro.distributed import forcemesh  # imports no jax
+
+# REPRO_FORCE_MESH phase 1 (forced host devices) must land in XLA_FLAGS
+# before jax initialises its CPU backend — i.e. before the import below
+forcemesh.apply_xla_flags()
 
 import jax
 import jax.numpy as jnp
@@ -137,6 +149,66 @@ def compare_kernels(batches=BENCH_SHAPES, *, iters=10) -> list[dict]:
     return entries
 
 
+def sharded_classify_entries(batches=BENCH_SHAPES, *, classes: int = 512,
+                             iters: int = 10) -> list[dict]:
+    """Replicated-vs-bank-sharded classify rows (the model-axis story).
+
+    Times `MatchEngine.classify_features` over a ``classes``-row bank with
+    the forced ``REPRO_FORCE_MESH`` mesh installed (super-bank class rows
+    sharded over "model", batch over "data") against the same engine
+    replicated. Emits nothing when no forced mesh is available. On CPU both
+    sides run Pallas-interpret, so these rows track the *dispatch
+    structure* cost; the replicated-vs-sharded crossover is a TPU number.
+    """
+    from repro import match
+    from repro.core import templates as T
+    from repro.distributed import context
+
+    spec = forcemesh.env_spec()
+    if spec is None:
+        return []
+    try:
+        mesh = forcemesh.install(spec)
+    except RuntimeError as e:
+        print(f"skipping sharded-classify rows: {e}")
+        return []
+    # record what the engine will actually do, not the mesh shape: a model
+    # axis that doesn't divide `classes` runs bank-replicated
+    plan, _ = match.plan_for(batch=batches[0], num_classes=classes)
+    shards = plan.bank_shards
+    if shards == 1:
+        print(f"skipping sharded-classify rows: {classes} classes do not "
+              f"shard over the {dict(mesh.shape)} mesh")
+        context.clear()
+        return []
+
+    key = jax.random.PRNGKey(1)
+    tmpl = (jax.random.uniform(key, (classes, 1, N)) > 0.5
+            ).astype(jnp.float32)
+    bank = T.TemplateBank(
+        templates=tmpl, lower=jnp.zeros_like(tmpl),
+        upper=jnp.ones_like(tmpl), valid=jnp.ones((classes, 1), bool),
+        thresholds=jnp.zeros((N,)))
+    eng = match.engine_for(backend="kernel")
+
+    entries = []
+    for b in batches:
+        f = jax.random.normal(jax.random.fold_in(key, b), (b, N))
+        it = max(3, iters // 4) if b >= 4096 else iters
+        context.set_mesh_axes("data", "model", mesh)
+        sharded_us = _time(jax.jit(
+            lambda x: eng.classify_features(x, bank)), f, iters=it)
+        context.clear()
+        rep_us = _time(jax.jit(
+            lambda x: eng.classify_features(x, bank)), f, iters=it)
+        e = _compare_entry("acam_match_classify_sharded", b, classes, N,
+                           rep_us, sharded_us)
+        e["bank_sharding"] = shards
+        entries.append(e)
+    context.clear()
+    return entries
+
+
 def write_bench_json(entries: list[dict],
                      path: str = "BENCH_kernels.json") -> None:
     from repro.kernels import tuning
@@ -157,7 +229,9 @@ def run() -> list[dict]:
     rows = []
     key = jax.random.PRNGKey(0)
 
-    entries = compare_kernels(SMOKE_SHAPES if fast else BENCH_SHAPES)
+    shapes = SMOKE_SHAPES if fast else BENCH_SHAPES
+    entries = compare_kernels(shapes)
+    entries += sharded_classify_entries(shapes)  # no-op without forced mesh
     write_bench_json(entries)
     for e in entries:
         rows.append({

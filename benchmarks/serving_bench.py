@@ -17,14 +17,25 @@ BENCH_serving.json schema::
      "interpret": bool,
      "entries": [
        {"tenants": 8, "slots": 256, "requests": 1024,
+        "classes": 10,                # classes per synthetic tenant
         "matching_backend": "default",  # or the pinned engine backend
                                         # ("device" = RRAM-physics row)
+        "bank_sharding": 1,           # super-bank class-row shards (model
+                                      # axis size; 1 = replicated bank)
         "requests_per_s": ...,        # completed / service busy time
         "latency_p50_ms": ..., "latency_p99_ms": ...,
         "escalation_rate": ...,       # cascade escalations / requests
         "nj_per_request": ...,        # E_backend (+ E_frontend if escalated)
         "occupancy": ...,             # mean batch fill fraction
         "classify_dispatches": ...}]}
+
+The **bank-scaling sweep** (`bank_scaling_sweep`) grows tenants x classes
+and, when ``REPRO_FORCE_MESH=DxM`` provides a forced host mesh, measures
+every point replicated AND bank-sharded — the `bank_sharding` field is how
+BENCH json tracks the replicated-vs-sharded crossover as the super-bank
+outgrows one device. (On this CPU container both run through Pallas
+interpret, so the sharded rows are a correctness-path number; the
+crossover itself is a TPU measurement.)
 
 ``--smoke`` restricts the sweep for CI. `run()` keeps the harness contract
 used by benchmarks/run.py: a list of ``{"name", "us_per_call", "derived"}``
@@ -47,12 +58,15 @@ NUM_CLASSES = 10
 
 
 def bench_service(tenants: int, slots: int, *, requests: int | None = None,
-                  seed: int = 0, backend: str | None = None) -> dict:
+                  seed: int = 0, backend: str | None = None,
+                  classes: int = NUM_CLASSES) -> dict:
     """Serve a mixed-tenant burst through a fresh service; return metrics.
 
     ``backend`` pins the scheduler's `repro.match` engine backend;
     margin_tau stays in match-count units — the service converts to the
-    device backend's matchline-fraction units itself.
+    device backend's matchline-fraction units itself. The service infers
+    ``bank_sharding`` from whatever mesh is installed when this runs
+    (`bank_scaling_sweep` toggles it).
     """
     from repro.serve import acam_service as svc_lib
 
@@ -65,7 +79,7 @@ def bench_service(tenants: int, slots: int, *, requests: int | None = None,
     protos = []
     for t in range(tenants):
         bank, head, p = svc_lib.make_synthetic_tenant(
-            seed * 1000 + t, num_classes=NUM_CLASSES,
+            seed * 1000 + t, num_classes=classes,
             num_features=NUM_FEATURES)
         svc.register_tenant(f"t{t}", bank, head=head)
         protos.append(p)
@@ -89,7 +103,9 @@ def bench_service(tenants: int, slots: int, *, requests: int | None = None,
         "tenants": tenants,
         "slots": slots,
         "requests": requests,
+        "classes": classes,
         "matching_backend": backend or "default",
+        "bank_sharding": svc.registry.bank_shards,
         "requests_per_s": m["requests_per_s"],
         "latency_p50_ms": m["latency_p50_ms"],
         "latency_p99_ms": m["latency_p99_ms"],
@@ -100,17 +116,54 @@ def bench_service(tenants: int, slots: int, *, requests: int | None = None,
     }
 
 
+def _report(e):
+    print(f"tenants={e['tenants']:3d} classes={e['classes']:3d} "
+          f"slots={e['slots']:4d} shards={e['bank_sharding']} "
+          f"backend={e['matching_backend']:9s}: "
+          f"{e['requests_per_s']:9.1f} req/s, "
+          f"escalation {e['escalation_rate']:.3f}, "
+          f"{e['nj_per_request']:.2f} nJ/req, "
+          f"occupancy {e['occupancy']:.2f}")
+
+
+def bank_scaling_sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
+    """Grow the super-bank (tenants x classes) replicated vs bank-sharded.
+
+    The sharded points need a model mesh axis: when ``REPRO_FORCE_MESH``
+    provides forced host devices the sweep installs the mesh around each
+    sharded measurement (`repro.distributed.forcemesh`); without it only
+    the replicated rows are emitted.
+    """
+    from repro.distributed import context, forcemesh
+
+    grid = ((4, 16), (8, 32)) if smoke else ((8, 16), (32, 32), (64, 48))
+    slots = min(SLOT_SWEEP[-1], 64)
+    spec = forcemesh.env_spec()
+    entries = []
+    for tenants, classes in grid:
+        requests = 2 * slots if smoke else 4 * slots
+        context.clear()
+        entries.append(bench_service(tenants, slots, requests=requests,
+                                     seed=seed, classes=classes))
+        _report(entries[-1])
+        if spec is None:
+            continue
+        try:
+            forcemesh.install(spec)
+        except RuntimeError as e:
+            print(f"skipping sharded rows: {e}")
+            spec = None
+            continue
+        entries.append(bench_service(tenants, slots, requests=requests,
+                                     seed=seed, classes=classes))
+        _report(entries[-1])
+        context.clear()
+    return entries
+
+
 def sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
     tenant_grid = SMOKE_TENANTS if smoke else TENANT_SWEEP
     slot_grid = SMOKE_SLOTS if smoke else SLOT_SWEEP
-
-    def _report(e):
-        print(f"tenants={e['tenants']:3d} slots={e['slots']:4d} "
-              f"backend={e['matching_backend']:9s}: "
-              f"{e['requests_per_s']:9.1f} req/s, "
-              f"escalation {e['escalation_rate']:.3f}, "
-              f"{e['nj_per_request']:.2f} nJ/req, "
-              f"occupancy {e['occupancy']:.2f}")
 
     entries = []
     for tenants in tenant_grid:
@@ -129,6 +182,8 @@ def sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
                                  else max(4 * slots, 128),
                                  seed=seed, backend="device"))
     _report(entries[-1])
+    # bank-scaling rows: replicated vs sharded super-bank (the crossover)
+    entries.extend(bank_scaling_sweep(smoke=smoke, seed=seed))
     return entries
 
 
@@ -147,11 +202,17 @@ def write_bench_json(entries: list[dict],
 
 def run() -> list[dict]:
     """benchmarks/run.py harness contract."""
+    from repro.distributed import forcemesh
+
+    # phase 1 of REPRO_FORCE_MESH must precede jax backend init; this
+    # module leaves jax untouched until bench_service, so this is in time
+    forcemesh.apply_xla_flags()
     fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
     entries = sweep(smoke=fast)
     write_bench_json(entries)
     return [{
-        "name": f"serving_t{e['tenants']}_s{e['slots']}"
+        "name": f"serving_t{e['tenants']}_c{e['classes']}_s{e['slots']}"
+        + ("" if e["bank_sharding"] == 1 else f"_shard{e['bank_sharding']}")
         + ("" if e["matching_backend"] == "default"
            else f"_{e['matching_backend']}"),
         "us_per_call": round(1e6 / e["requests_per_s"], 2)

@@ -23,6 +23,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--n-per-class", type=int, default=None)
+    ap.add_argument("--mc", type=int, default=0, metavar="N",
+                    help="Monte-Carlo sweep: N independent sigma_program "
+                         "draws (engine.sweep_program_noise) -> confidence "
+                         "interval on noisy-hardware accuracy")
     args = ap.parse_args()
     n = args.n_per_class or (120 if args.fast else 400)
     epochs = 2 if args.fast else 4
@@ -64,6 +68,21 @@ def main():
           f"(matches the window model exactly)")
     print(f"   noisy RRAM (sigma=0.10)    : {acc_noisy:.4f} "
           f"(programming variability, §III)")
+
+    if args.mc > 0:
+        # one programmed array is a single sample of the write-noise
+        # process; the vmapped sweep turns it into a confidence interval
+        for sigma in (0.05, 0.10, 0.20):
+            eng = match.engine_for(
+                backend="device",
+                device=acam.ACAMConfig(sigma_program=sigma), seed=7)
+            preds, _ = eng.sweep_program_noise(feats_te, head.bank, args.mc)
+            accs = jnp.mean(preds == te.labels[None, :], axis=1)
+            print(f"   MC x{args.mc} sigma={sigma:.2f}      : "
+                  f"{float(jnp.mean(accs)):.4f} +/- "
+                  f"{float(jnp.std(accs)):.4f} "
+                  f"(min {float(jnp.min(accs)):.4f}, "
+                  f"max {float(jnp.max(accs)):.4f})")
 
     print("== energy (paper §V-D arithmetic)")
     nums = energy.paper_numbers()

@@ -108,10 +108,11 @@ def fit_acam_head(
 
 
 @functools.partial(jax.jit, static_argnames=("feature_fn", "method", "alpha",
-                                             "backend"))
+                                             "backend", "mesh_gen"))
 def _fused_forward(params: Any, bank: templates.TemplateBank, x: Array, *,
                    feature_fn: Callable[[Any, Array], Array], method: str,
-                   alpha: float, backend: str) -> tuple[Array, Array]:
+                   alpha: float, backend: str, mesh_gen: int = 0
+                   ) -> tuple[Array, Array]:
     """One end-to-end jitted graph: front-end -> fused ACAM classify.
 
     Module-level (static feature_fn/method/alpha/backend, bank as a pytree
@@ -124,7 +125,11 @@ def _fused_forward(params: Any, bank: templates.TemplateBank, x: Array, *,
     keys a *different* executable — the old behaviour, where the default
     was read at trace time and a later change could never affect an
     already-traced graph, is gone (tested in tests/test_match_engine.py).
+    ``mesh_gen`` (`distributed.context.generation()`) is static for the
+    same reason: the engine bakes its `PartitionPlan` into this trace, so
+    installing a new mesh must re-trace, not replay the stale layout.
     """
+    del mesh_gen  # cache key only
     feats = feature_fn(params, x)
     eng = match_lib.engine_for(method=method, alpha=alpha, backend=backend)
     return eng.classify_features(feats, bank)
@@ -138,13 +143,17 @@ class HybridClassifier(NamedTuple):
     head: ACAMHead
 
     def predict(self, x: Array) -> Array:
-        # resolve the backend OUTSIDE the jit boundary: static argument
+        from repro.distributed import context
+
+        # resolve the backend and mesh generation OUTSIDE the jit boundary:
+        # both are static arguments, so changing either re-traces
         backend = self.head.backend or match_lib.default_backend()
         pred, _ = _fused_forward(self.params, self.head.bank, x,
                                  feature_fn=self.feature_fn,
                                  method=self.head.method,
                                  alpha=self.head.alpha,
-                                 backend=backend)
+                                 backend=backend,
+                                 mesh_gen=context.generation())
         return pred
 
     def accuracy(self, x: Array, y: Array, *, batch_size: int = 1024) -> float:

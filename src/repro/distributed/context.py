@@ -20,24 +20,39 @@ class MeshAxes(NamedTuple):
 
 _AXES: MeshAxes | None = None
 _MESH = None
+_GENERATION = 0
 
 
 def set_mesh_axes(dp, model: str = "model", mesh=None) -> None:
-    global _AXES, _MESH
+    global _AXES, _MESH, _GENERATION
     _AXES = MeshAxes(dp, model)
     _MESH = mesh
+    _GENERATION += 1
 
 
 def get_mesh():
     return _MESH
 
 
+def generation() -> int:
+    """Monotonic mesh-change counter, bumped by `set_mesh_axes`/`clear`.
+
+    Jitted callers that bake the mesh decision into their trace (the engine's
+    `PartitionPlan`, `with_sharding_constraint` hints) thread this as a
+    *static* argument — e.g. `hybrid._fused_forward` and the serving
+    scheduler's tick — so installing a different mesh keys a fresh
+    executable instead of silently replaying the stale one.
+    """
+    return _GENERATION
+
+
 def clear() -> None:
-    global _AXES, _MESH, _LAYER_CONSTRAINT, _HEAD_CONSTRAINT
+    global _AXES, _MESH, _LAYER_CONSTRAINT, _HEAD_CONSTRAINT, _GENERATION
     _AXES = None
     _MESH = None
     _LAYER_CONSTRAINT = None
     _HEAD_CONSTRAINT = None
+    _GENERATION += 1
 
 
 def get() -> MeshAxes | None:

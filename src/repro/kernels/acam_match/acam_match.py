@@ -40,6 +40,16 @@ Three entry points:
                            **margin** — the confidence signal the hybrid
                            cascade thresholds to decide accept-at-ACAM vs
                            escalate to the CNN head.
+  `acam_match_classify_margins_chunked`
+                        -> the big-bank margins variant: the template rows
+                           arrive as a (K, Cp, N) stack and the grid tiles
+                           the *class* dimension in ``cc``-column chunks, so
+                           only K * cc template rows are VMEM-resident at a
+                           time while the per-class running max accumulates
+                           in a revisited (bm, Cp) block. Banks past the
+                           fused-row budget (`repro.match.MAX_FUSED_ROWS`)
+                           stay a SINGLE pallas_call instead of falling back
+                           to the two-stage kernel + jnp margin epilogue.
 
 `repro.core.matching` dispatches to these by default (see its docstring for
 the backend-selection API); the jnp references remain as oracles.
@@ -302,4 +312,121 @@ def acam_match_classify_margins(
         ],
         interpret=interpret,
     )(f, thr, t, vrow, lo, hi)
+    return pred[:b, 0], per_class[:b, :num_classes], margin[:b, 0]
+
+
+def _classify_margins_chunked_kernel(f_ref, thr_ref, t_ref, v_ref, lo_ref,
+                                     hi_ref, acc_ref, pc_ref, pred_ref,
+                                     margin_ref, *, nj: int, nk: int,
+                                     n_true: int, num_k: int, cc: int):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pm = jnp.where(f_ref[...] > thr_ref[...], 1.0, -1.0).astype(jnp.bfloat16)
+    # this chunk's K * cc template rows, flattened K-major: row kk*cc + c
+    t = t_ref[...].reshape(num_k * cc, t_ref.shape[-1])
+    t_pm = (2.0 * t - 1.0).astype(jnp.bfloat16)
+    acc_ref[...] += jax.lax.dot_general(
+        q_pm, t_pm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _chunk_epilogue():
+        from repro.kernels.layout import windowed_margin
+
+        np_ = float(nk * f_ref.shape[-1])
+        scores = (np_ + acc_ref[...]) * 0.5 - (np_ - n_true)
+        vrow = v_ref[...].reshape(1, num_k * cc)
+        s = jnp.where(vrow > 0, scores, -jnp.inf)
+        chunk_pc = s[:, :cc]
+        for kk in range(1, num_k):
+            chunk_pc = jnp.maximum(chunk_pc, s[:, kk * cc:(kk + 1) * cc])
+        # running per-class max in the revisited (bm, Cp) block; the j == 0
+        # chunk overwrites whatever the buffer held (uninitialised memory)
+        prev = jnp.where(j == 0,
+                         jnp.full(pc_ref.shape, -jnp.inf, pc_ref.dtype),
+                         pc_ref[...])
+        # chunk offsets are cc (lane-tile) multiples, so the dynamic lane
+        # slice stays aligned on TPU
+        pc = jax.lax.dynamic_update_slice(prev, chunk_pc, (0, j * cc))
+        pc_ref[...] = pc
+
+        @pl.when(j == nj - 1)
+        def _final():
+            pred, margin = windowed_margin(pc, lo_ref[..., :1],
+                                           hi_ref[..., :1], float(n_true))
+            pred_ref[...] = jnp.broadcast_to(pred[:, None], pred_ref.shape)
+            margin_ref[...] = jnp.broadcast_to(margin[:, None],
+                                               margin_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "chunk", "block",
+                                             "interpret"))
+def acam_match_classify_margins_chunked(
+        features: jax.Array, thresholds: jax.Array,
+        templates_kcp: jax.Array, valid_kcp: jax.Array,
+        class_lo: jax.Array, class_hi: jax.Array, num_classes: int, *,
+        chunk: int, block=DEFAULT_BLOCK, interpret: bool = False
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Class-chunked `acam_match_classify_margins` for big banks.
+
+    Same contract and outputs as the fused margins kernel, but the
+    templates arrive as a (K, Cp, N) stack (`repro.kernels.layout.stack_kcp`)
+    and the grid walks the class dimension in ``chunk``-column tiles
+    (``chunk`` a lane-multiple divisor of Cp, `layout.class_chunk`): at any
+    moment only K * chunk template rows sit in VMEM, the Eq. 12 per-class
+    max accumulates across chunks in a revisited (bm, Cp) output block, and
+    the windowed-margin epilogue runs once at the last chunk — ONE
+    pallas_call at any bank size.
+    """
+    b, n = features.shape
+    num_k, cp, _ = templates_kcp.shape
+    assert cp % chunk == 0, "chunk must divide the padded class count"
+    bm, _, bk = block
+    bp, np_ = (-(-b // bm) * bm, -(-n // bk) * bk)
+
+    f = jnp.pad(features, ((0, bp - b), (0, np_ - n)))
+    thr = jnp.pad(thresholds, (0, np_ - n), constant_values=jnp.inf)[None, :]
+    t = jnp.pad(templates_kcp, ((0, 0), (0, 0), (0, np_ - n)))
+    lo = jnp.broadcast_to(
+        jnp.pad(class_lo.astype(jnp.int32), (0, bp - b))[:, None],
+        (bp, PRED_LANES))
+    hi = jnp.broadcast_to(
+        jnp.pad(class_hi.astype(jnp.int32), (0, bp - b))[:, None],
+        (bp, PRED_LANES))
+
+    nj = cp // chunk
+    nk = np_ // bk
+    grid = (bp // bm, nj, nk)
+    _, per_class, pred, margin = pl.pallas_call(
+        functools.partial(_classify_margins_chunked_kernel, nj=nj, nk=nk,
+                          n_true=n, num_k=num_k, cc=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, bk), lambda i, j, k: (0, k)),
+            pl.BlockSpec((num_k, chunk, bk), lambda i, j, k: (0, j, k)),
+            pl.BlockSpec((num_k, chunk), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, num_k * chunk), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, cp), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            # per-chunk score accumulator (K * cc live rows per grid step)
+            jax.ShapeDtypeStruct((bp, num_k * cp), jnp.float32),
+            jax.ShapeDtypeStruct((bp, cp), jnp.float32),  # running per-class
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.int32),  # WTA index
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.float32),  # margin
+        ],
+        interpret=interpret,
+    )(f, thr, t, valid_kcp, lo, hi)
     return pred[:b, 0], per_class[:b, :num_classes], margin[:b, 0]

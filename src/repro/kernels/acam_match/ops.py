@@ -22,9 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import layout, tuning
-from repro.kernels.acam_match.acam_match import (DEFAULT_BLOCK, acam_match,
-                                                 acam_match_classify,
-                                                 acam_match_classify_margins)
+from repro.kernels.acam_match.acam_match import (
+    DEFAULT_BLOCK, acam_match, acam_match_classify,
+    acam_match_classify_margins, acam_match_classify_margins_chunked)
 
 
 _on_cpu = tuning.interpret_mode
@@ -102,3 +102,31 @@ def classify_fused_margins(features: jax.Array, thresholds: jax.Array,
     return acam_match_classify_margins(features, thresholds, t_km, v_km,
                                        class_lo, class_hi, c, block=block,
                                        interpret=_on_cpu())
+
+
+def classify_fused_margins_chunked(
+        features: jax.Array, thresholds: jax.Array, templates_ck: jax.Array,
+        valid_ck: jax.Array, class_lo: jax.Array | None = None,
+        class_hi: jax.Array | None = None, *, max_rows: int,
+        block=None) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """`classify_fused_margins` for banks past the fused-row budget.
+
+    Stacks the bank (K, Cp, N) (`layout.stack_kcp`) and tiles the class
+    dimension in `layout.class_chunk(..., max_rows)`-column chunks, keeping
+    the big-bank serving path a SINGLE pallas_call (no two-stage kernel +
+    jnp margin epilogue). Same contract/outputs as `classify_fused_margins`.
+    """
+    c, k, n = templates_ck.shape
+    b = features.shape[0]
+    if class_lo is None:
+        class_lo = jnp.zeros((b,), jnp.int32)
+    if class_hi is None:
+        class_hi = jnp.full((b,), c, jnp.int32)
+    block = _resolve(features, c * k, block)
+    cp = layout.padded_classes(c)
+    chunk = layout.class_chunk(cp, k, max_rows)
+    t_kcp = layout.stack_kcp(templates_ck, c)
+    v_kcp = layout.valid_kcp(valid_ck, c)
+    return acam_match_classify_margins_chunked(
+        features, thresholds, t_kcp, v_kcp, class_lo, class_hi, c,
+        chunk=chunk, block=block, interpret=_on_cpu())

@@ -43,6 +43,42 @@ def valid_kmajor(valid: jax.Array, num_classes: int) -> jax.Array:
     return out.reshape(k * cp)
 
 
+def stack_kcp(arr: jax.Array, num_classes: int) -> jax.Array:
+    """(C, K, N) -> (K, Cp, N), zero-padded: the 3D operand of the
+    class-chunked margins kernel. Row [kk, c] = arr[c, kk]; a chunk of
+    ``cc`` class columns is a contiguous (K, cc, N) block, so the kernel
+    tiles the class dimension with a plain BlockSpec instead of keeping
+    all K * Cp rows VMEM-resident."""
+    c, k, n = arr.shape
+    assert c == num_classes
+    cp = padded_classes(c)
+    return jnp.zeros((k, cp, n), arr.dtype).at[:, :c, :].set(
+        jnp.swapaxes(arr, 0, 1))
+
+
+def valid_kcp(valid: jax.Array, num_classes: int) -> jax.Array:
+    """(C, K) bool -> (K, Cp) float {0,1}; padded classes are invalid."""
+    c, k = valid.shape
+    assert c == num_classes
+    cp = padded_classes(c)
+    return jnp.zeros((k, cp), jnp.float32).at[:, :c].set(
+        jnp.swapaxes(valid.astype(jnp.float32), 0, 1))
+
+
+def class_chunk(cp: int, num_k: int, max_rows: int, lane: int = LANE) -> int:
+    """Class columns per chunk for the chunked margins kernel: the largest
+    lane-multiple divisor of ``Cp`` whose ``num_k * cc`` template rows fit
+    the fused-row budget; ``lane`` when even one K-slice of a single lane
+    tile exceeds it (the budget is a VMEM policy, not a hard limit)."""
+    best = lane
+    for units in range(cp // lane, 0, -1):
+        cc = units * lane
+        if cp % cc == 0 and num_k * cc <= max_rows:
+            best = cc
+            break
+    return best
+
+
 def wta_epilogue(scores: jax.Array, valid_row: jax.Array, cp: int,
                  num_k: int) -> tuple[jax.Array, jax.Array]:
     """Shared fused-kernel epilogue over K-major scores (pure jnp, runs

@@ -19,3 +19,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh for CPU smoke tests (axes kept for spec parity)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_serving_mesh(*, bank_shards: int = 1):
+    """(data = devices/bank_shards, model = bank_shards) over the available
+    devices — the ACAM serving layout: request batches shard over "data",
+    the template super-bank's class rows shard over "model" (the engine's
+    `repro.match.plan.PartitionPlan`). ``bank_shards=1`` degenerates to
+    pure data parallelism (bank replicated).
+
+    On CPU, force host devices first (``REPRO_FORCE_MESH`` /
+    `repro.distributed.forcemesh.apply_xla_flags` before jax initialises).
+    """
+    ndev = len(jax.devices())
+    if bank_shards < 1 or ndev % bank_shards:
+        raise ValueError(
+            f"bank_shards={bank_shards} must divide the {ndev} available "
+            "devices")
+    return jax.make_mesh((ndev // bank_shards, bank_shards),
+                         ("data", "model"))

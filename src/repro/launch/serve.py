@@ -21,6 +21,9 @@ Two workloads behind one CLI:
       --tenants 8 --requests 256 --slots 64
   PYTHONPATH=src python -m repro.launch.serve --workload acam \
       --backend device   # serve through the RRAM-CMOS physics models
+  REPRO_FORCE_MESH=2x2 PYTHONPATH=src python -m repro.launch.serve \
+      --workload acam --bank-shards 2   # 2D-sharded: batch over "data",
+                                        # super-bank class rows over "model"
 """
 from __future__ import annotations
 
@@ -29,6 +32,21 @@ import time
 
 import jax
 import numpy as np
+
+
+def install_acam_mesh(bank_shards: int) -> None:
+    """Install the (data, model=bank_shards) serving mesh into the
+    distributed context — BEFORE the service is constructed, so the
+    registry aligns tenant placement to the same shards the engine's
+    `PartitionPlan` cuts the super-bank along."""
+    from repro.distributed import context
+    from repro.launch.mesh import make_serving_mesh
+
+    mesh = make_serving_mesh(bank_shards=bank_shards)
+    context.set_mesh_axes("data", "model", mesh)
+    shape = dict(mesh.shape)
+    print(f"installed serving mesh data={shape['data']} "
+          f"model={shape['model']} ({len(mesh.devices.flat)} devices)")
 
 
 def run_lm(args) -> dict:
@@ -56,8 +74,11 @@ def run_lm(args) -> dict:
 def run_acam(args) -> dict:
     from repro.serve import acam_service as svc_lib
 
+    if args.bank_shards > 1:
+        install_acam_mesh(args.bank_shards)
     # margin_tau is in match-count units for every backend: the service
-    # rescales to matchline fractions itself when backend == "device"
+    # rescales to matchline fractions itself when backend == "device";
+    # bank_shards is inferred from the just-installed mesh
     cfg = svc_lib.ServiceConfig(slots=args.slots, margin_tau=args.margin_tau)
     svc = svc_lib.ACAMService(args.features, config=cfg,
                               backend=args.backend)
@@ -131,6 +152,11 @@ def main(argv=None) -> dict:
                          "(device = RRAM-CMOS physics models; margin-tau "
                          "is auto-rescaled to matchline-fraction units); "
                          "default: process REPRO_MATCHING_BACKEND / auto")
+    ap.add_argument("--bank-shards", type=int, default=1,
+                    help="shard the template super-bank's class rows over "
+                         "a model mesh axis of this size (must divide the "
+                         "device count; on CPU set REPRO_FORCE_MESH or "
+                         "XLA_FLAGS host-device count first)")
     args = ap.parse_args(argv)
     if args.requests is None:
         args.requests = 8 if args.workload == "lm" else 256

@@ -1,37 +1,46 @@
 """repro.match — the pluggable, mesh-aware template-matching engine.
 
-Layering (backends x callers):
+Layering (plan x backends x callers):
 
     callers   repro.core.hybrid (ACAMHead / HybridClassifier)
-              repro.serve.{scheduler, acam_service}  (super-bank serving)
-              repro.launch.serve --workload acam --backend ...
+              repro.serve.{registry, scheduler, acam_service}  (super-bank)
+              repro.launch.serve --workload acam --backend/--bank-shards
               benchmarks/{kernel_bench, serving_bench}, examples/*
                  |
-    engine    MatchEngine(EngineConfig)   one hashable config; jit-static;
-              shard_map over the dp mesh axes when a mesh is installed
+    engine    MatchEngine(EngineConfig)   one hashable config; jit-static
+                 |
+    plan      PartitionPlan(config, mesh, static shapes): batch over the dp
+              axes, bank class rows over the model axis, or both (2D); the
+              cross-shard (max, argmax) reduce keeps decisions/margins
+              bit-identical to replicated execution
                  |
     backends  reference (jnp oracles) | kernel (Pallas fused/two-stage +
               autotuner) | device (repro.core.acam RRAM-CMOS physics)
 
-See `repro.match.engine` and `repro.match.backends` for the contracts.
+See `repro.match.engine`, `repro.match.plan` and `repro.match.backends`
+for the contracts.
 """
 from repro.match.backends import (MAX_FUSED_ROWS, TINY_ELEMENTS,
                                   DeviceBackend, KernelBackend, MatchBackend,
                                   ReferenceBackend, backend_for,
                                   backend_names, classify_scores,
                                   feature_count_scores_ref, register_backend,
-                                  similarity_scores_ref, window_margin,
-                                  winner_take_all)
+                                  shard_window_top2, similarity_scores_ref,
+                                  window_margin, winner_take_all)
 from repro.match.config import EngineConfig
-from repro.match.engine import (MatchEngine, batch_specs, default_backend,
-                                dp_axes_in_mesh, engine_for,
+from repro.match.engine import (MatchEngine, bank_specs, batch_specs,
+                                default_backend, dp_axes_in_mesh, engine_for,
                                 set_default_backend, use_backend)
+from repro.match.plan import (REPLICATED, PartitionPlan, bank_shards_in_mesh,
+                              plan_for)
 
 __all__ = [
     "MAX_FUSED_ROWS", "TINY_ELEMENTS", "DeviceBackend", "KernelBackend",
     "MatchBackend", "ReferenceBackend", "backend_for", "backend_names",
     "classify_scores", "feature_count_scores_ref", "register_backend",
-    "similarity_scores_ref", "window_margin", "winner_take_all",
-    "EngineConfig", "MatchEngine", "batch_specs", "default_backend",
-    "dp_axes_in_mesh", "engine_for", "set_default_backend", "use_backend",
+    "shard_window_top2", "similarity_scores_ref", "window_margin",
+    "winner_take_all", "EngineConfig", "MatchEngine", "bank_specs",
+    "batch_specs", "default_backend", "dp_axes_in_mesh", "engine_for",
+    "set_default_backend", "use_backend", "REPLICATED", "PartitionPlan",
+    "bank_shards_in_mesh", "plan_for",
 ]

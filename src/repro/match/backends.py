@@ -79,6 +79,36 @@ def winner_take_all(per_class: Array) -> Array:
     return jax.nn.one_hot(jnp.argmax(per_class, axis=-1), per_class.shape[-1])
 
 
+def shard_window_top2(per_class: Array, class_lo: Array | None,
+                      class_hi: Array | None, row0: Array
+                      ) -> tuple[Array, Array, Array]:
+    """Shard-local windowed (top1, winner index, top2) — the margin partial.
+
+    ``per_class`` is this shard's (B, C_local) slice of the per-class
+    scores; ``row0`` the shard's first *global* class row; windows are
+    global class indices (they may straddle shards — the iota offset
+    intersects them with this shard's rows). Returns the three (B,) partials
+    the engine's cross-shard margin reduce combines: the top1 value, its
+    global class index (lowest-first among local ties, like `jnp.argmax`),
+    and the runner-up *excluding only the winner's position* (so a tied
+    class elsewhere yields top2 == top1, margin 0 — exactly
+    `repro.kernels.layout.windowed_margin` semantics). No cap clamp here:
+    the clamp is a global property, applied after the reduce.
+    """
+    b, c = per_class.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b, c), 1)
+    giota = iota + row0
+    if class_lo is not None:
+        win = (giota >= class_lo[:, None]) & (giota < class_hi[:, None])
+        s = jnp.where(win, per_class, NEG)
+    else:
+        s = per_class
+    local = jnp.argmax(s, axis=-1)
+    top1 = jnp.take_along_axis(s, local[:, None], axis=-1)[:, 0]
+    top2 = jnp.max(jnp.where(iota == local[:, None], NEG, s), axis=-1)
+    return top1, (local + row0).astype(jnp.int32), top2
+
+
 def window_margin(per_class: Array, class_lo: Array | None = None,
                   class_hi: Array | None = None, *,
                   cap: float) -> tuple[Array, Array]:
@@ -147,6 +177,13 @@ class MatchBackend:
 
     name = "base"
 
+    #: whether the engine may cut this backend's bank into class-row shards
+    #: (`repro.match.plan`). True for the digital backends — their scores
+    #: are row-independent, so a shard computes bit-identical per-class
+    #: values. The device backend overrides this (programming noise is drawn
+    #: per physical array, not per shard).
+    supports_bank_sharding = True
+
     def __init__(self, config: EngineConfig):
         self.config = config
 
@@ -193,6 +230,39 @@ class MatchBackend:
         pred, margin = window_margin(per_class, class_lo, class_hi,
                                      cap=self.margin_cap(features.shape[-1]))
         return pred, per_class, margin
+
+    # -- shard-local classify (bank-sharded execution, repro.match.plan) -----
+    #
+    # Under a bank-sharded PartitionPlan each device holds only class rows
+    # [row0, row0 + C_local) of the bank. These entry points run the
+    # backend's (fused) classify on that shard and return row-offset-aware
+    # partials — per_class plus the (top1, global winner index[, top2])
+    # summary the engine's cross-shard (max, argmax) reduce combines into
+    # the exact global Eq. 12 decision and margin.
+
+    def classify_shard(self, queries: Array, bank: TemplateBank, row0: Array
+                       ) -> tuple[Array, Array, Array]:
+        """Binary queries -> (per_class (B, C_local), top1 (B,), gidx (B,))."""
+        pred, per_class = self.classify(queries, bank)
+        return per_class, jnp.max(per_class, axis=-1), \
+            (pred + row0).astype(jnp.int32)
+
+    def classify_features_shard(self, features: Array, bank: TemplateBank,
+                                row0: Array) -> tuple[Array, Array, Array]:
+        """Raw features -> (per_class (B, C_local), top1 (B,), gidx (B,))."""
+        pred, per_class = self.classify_features(features, bank)
+        return per_class, jnp.max(per_class, axis=-1), \
+            (pred + row0).astype(jnp.int32)
+
+    def classify_features_margin_shard(
+        self, features: Array, bank: TemplateBank, class_lo: Array,
+        class_hi: Array, row0: Array,
+    ) -> tuple[Array, Array, Array, Array]:
+        """Margin partials: (per_class, top1, gidx, top2), windows global."""
+        _, per_class = self.classify_features(features, bank)
+        top1, gidx, top2 = shard_window_top2(per_class, class_lo, class_hi,
+                                             row0)
+        return per_class, top1, gidx, top2
 
 
 # ---------------------------------------------------------------------------
@@ -313,14 +383,20 @@ class KernelBackend(MatchBackend):
         from repro.kernels.acam_match import ops as match_ops
 
         c, k, n = bank.templates.shape
-        if (self.config.method == "feature_count"
-                and k * layout.padded_classes(c) <= MAX_FUSED_ROWS):
-            # ONE pallas_call: binarize -> match -> per-class max -> WTA
-            # -> windowed winner-vs-runner-up margin
-            return match_ops.classify_fused_margins(
+        if self.config.method == "feature_count":
+            # ONE pallas_call either way: binarize -> match -> per-class max
+            # -> WTA -> windowed winner-vs-runner-up margin. Banks whose
+            # K * Cp rows fit the fused budget keep the whole bank VMEM-
+            # resident; bigger banks walk it in class-column chunks.
+            if k * layout.padded_classes(c) <= MAX_FUSED_ROWS:
+                return match_ops.classify_fused_margins(
+                    features.astype(jnp.float32), bank.thresholds,
+                    bank.templates, bank.valid, class_lo, class_hi,
+                    block=self.config.block)
+            return match_ops.classify_fused_margins_chunked(
                 features.astype(jnp.float32), bank.thresholds,
                 bank.templates, bank.valid, class_lo, class_hi,
-                block=self.config.block)
+                max_rows=MAX_FUSED_ROWS, block=self.config.block)
         return super().classify_features_margin(features, bank, class_lo,
                                                 class_hi)
 
@@ -348,20 +424,31 @@ class DeviceBackend(MatchBackend):
         super().__init__(config)
         self.acam_config = config.device or acam_lib.ACAMConfig()
 
-    def _program_rows(self, lower: Array, upper: Array,
-                      valid_flat: Array) -> acam_lib.ProgrammedACAM:
-        key = None
-        if self.acam_config.sigma_program > 0.0:
+    @property
+    def supports_bank_sharding(self) -> bool:
+        # sigma_program > 0 draws one noise field per *programmed array*;
+        # programming per-shard sub-arrays with the same key would realise a
+        # different noise layout than the replicated array, breaking the
+        # engine's bit-identical-to-replicated contract. The ideal array
+        # (sigma = 0) is row-independent and shards exactly.
+        return self.acam_config.sigma_program <= 0.0
+
+    def _program_rows(self, lower: Array, upper: Array, valid_flat: Array,
+                      key: Array | None = None) -> acam_lib.ProgrammedACAM:
+        if key is None and self.acam_config.sigma_program > 0.0:
             key = jax.random.PRNGKey(self.config.seed)
         return acam_lib.program(lower, upper, valid_flat, self.acam_config,
                                 key)
 
-    def program_bank(self, bank: TemplateBank) -> acam_lib.ProgrammedACAM:
+    def program_bank(self, bank: TemplateBank,
+                     key: Array | None = None) -> acam_lib.ProgrammedACAM:
         """The acam.py bridge: bank -> programmed (C*K, N) TXL array.
 
         Public so calibration flows (`acam.calibrate_windows`,
         `acam.soft_sense` gradients) can reach the exact array the engine
-        matches against.
+        matches against. ``key`` overrides the config-seed programming draw
+        (the Monte-Carlo sweep's per-draw keys); None keeps the
+        program-once-read-many default.
         """
         c, k, n = bank.templates.shape
         if self.config.method == "feature_count":
@@ -369,7 +456,7 @@ class DeviceBackend(MatchBackend):
         else:
             lo = bank.lower.reshape(c * k, n)
             hi = bank.upper.reshape(c * k, n)
-        return self._program_rows(lo, hi, bank.valid.reshape(c * k))
+        return self._program_rows(lo, hi, bank.valid.reshape(c * k), key)
 
     def _sense_rows(self, prog: acam_lib.ProgrammedACAM, queries: Array,
                     c: int, k: int) -> Array:
@@ -400,6 +487,20 @@ class DeviceBackend(MatchBackend):
     def scores(self, queries, bank):
         c, k, _ = bank.templates.shape
         return self._sense_rows(self.program_bank(bank), queries, c, k)
+
+    def classify_features_keyed(self, features: Array, bank: TemplateBank,
+                                key: Array) -> tuple[Array, Array]:
+        """One Monte-Carlo draw: program the bank with an explicit PRNG key
+        (instead of the config-seed key) and classify.
+
+        vmap-safe over ``key`` — `MatchEngine.sweep_program_noise` maps this
+        over a batch of keys to turn the single programming sample of the
+        program-once flow into per-draw confidence intervals.
+        """
+        c, k, _ = bank.templates.shape
+        prog = self.program_bank(bank, key)
+        q = quant.binarize(features, bank.thresholds)
+        return classify_scores(self._sense_rows(prog, q, c, k))
 
     def margin_cap(self, num_features: int) -> float:
         return 1.0  # sense outputs live in [0, 1] matchline units

@@ -25,17 +25,28 @@ static argument (`hybrid._fused_forward`, the scheduler tick), so changing
 the default triggers a fresh trace instead of being silently baked into an
 existing executable.
 
-Mesh sharding
--------------
-When `repro.distributed.context` holds a mesh (set by a launcher), engine
-calls whose batch divides the data-parallel device count execute under
-`jax.shard_map`: queries/features (and per-row class windows) are sharded
-over the dp axes, the template bank is replicated, and each device runs
-the backend on its batch shard — the template-matching batch dimension is
-embarrassingly parallel, so results are bit-identical to single-device
-execution. Callers that jit around the engine bake the mesh decision into
-their trace; launchers must install the mesh before the first call (the
-same contract as `context.constrain`).
+Mesh sharding (the PartitionPlan layer)
+---------------------------------------
+When `repro.distributed.context` holds a mesh (set by a launcher), every
+call derives a `repro.match.plan.PartitionPlan` from its static shapes and
+executes under a plan-driven 2D `jax.shard_map`:
+
+  * the **batch** shards over the data-parallel axes (when it divides the
+    dp device count) — embarrassingly parallel, as in PR 3;
+  * the **bank's class rows** shard over the model axis (when C divides the
+    model-axis size and the backend supports it): each device runs the
+    backend's (fused) classify on its class-row shard, producing per-class
+    partials, and one tiny cross-shard ``(max, argmax)`` reduce over the
+    model axis recovers the exact global Eq. 12 decision — and the windowed
+    winner-vs-runner-up margin — **bit-identically** to replicated
+    execution (ties resolve to the lowest global class index, exactly like
+    `jnp.argmax`; see `_reduce_winner` / `_reduce_margin`).
+
+Callers that jit around the engine bake the plan into their trace;
+launchers must install the mesh before the first call (the same contract
+as `context.constrain`), and jitted callers thread
+`distributed.context.generation()` as a static argument so installing a
+*different* mesh re-traces instead of silently replaying the old layout.
 """
 from __future__ import annotations
 
@@ -45,13 +56,16 @@ import math
 import os
 
 import jax
+import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.templates import TemplateBank
 from repro.match import backends as backends_lib
+from repro.match import plan as plan_lib
 from repro.match.backends import TINY_ELEMENTS, backend_for, backend_names
 from repro.match.config import EngineConfig, validate
+from repro.match.plan import PartitionPlan, plan_for
 
 Array = jax.Array
 
@@ -95,11 +109,8 @@ def use_backend(name: str):
 def dp_axes_in_mesh():
     """(mesh, dp_axes) from the distributed context, or (None, None) when
     no usable data-parallel mesh is installed."""
-    from repro.distributed import context
-
-    mesh = context.get_mesh()
-    axes = context.get()
-    if mesh is None or axes is None:
+    mesh, axes = plan_lib.mesh_axes()
+    if mesh is None:
         return None, None
     dp = axes.dp if isinstance(axes.dp, tuple) else (axes.dp,)
     if any(a not in mesh.axis_names for a in dp):
@@ -110,15 +121,70 @@ def dp_axes_in_mesh():
 
 
 def batch_specs(dp, n_batch_args: int, out_ranks: tuple[int, ...]):
-    """shard_map specs for a matching call: batch-leading operands sharded
-    over the dp axes, the bank replicated, outputs batch-leading.
+    """shard_map specs for a dp-only matching call: batch-leading operands
+    sharded over the dp axes, the bank replicated, outputs batch-leading.
 
     Exposed for tests: the first `n_batch_args` in_specs carry P(dp) — the
-    queries ARE dp-sharded — and the bank spec is P().
+    queries ARE dp-sharded — and the bank spec is P(). Bank-sharded calls
+    derive their 2D specs from the `PartitionPlan` instead
+    (`plan.batch_spec` / `plan.class_spec` / `plan.batch_class_spec`).
     """
     in_specs = tuple(P(dp) for _ in range(n_batch_args)) + (P(),)
     out_specs = tuple(P(dp, *([None] * (r - 1))) for r in out_ranks)
     return in_specs, out_specs
+
+
+def bank_specs(plan: PartitionPlan) -> TemplateBank:
+    """shard_map in_specs for a `TemplateBank` under the plan: class-row
+    leading arrays cut over the model axis, thresholds replicated."""
+    row = plan.class_spec()
+    return TemplateBank(templates=row, lower=row, upper=row, valid=row,
+                        thresholds=P())
+
+
+# ---------------------------------------------------------------------------
+# Cross-shard reduces (the "one tiny argmax reduce" of a bank-sharded call)
+# ---------------------------------------------------------------------------
+#
+# Each model-axis shard contributes a (top1, global winner index[, top2])
+# summary of its class rows. Shards hold *disjoint* class-index ranges, so
+# the merge below is exact: the winner is the lexicographic max on
+# (score desc, index asc) — precisely `jnp.argmax`'s lowest-index tie rule —
+# and the global runner-up over "all classes except the winner's position"
+# is max(loser shards' top1, winner shard's top2). Gather size is
+# (shards, B) scalars: tiny next to the (B, C/shards) score work.
+
+def _reduce_winner(top1: Array, gidx: Array, axis: str, num_shards: int
+                   ) -> tuple[Array, Array]:
+    t = jax.lax.all_gather(top1, axis)  # (S, B)
+    i = jax.lax.all_gather(gidx, axis)
+    best_t, best_i = t[0], i[0]
+    for s in range(1, num_shards):
+        take = (t[s] > best_t) | ((t[s] == best_t) & (i[s] < best_i))
+        best_t = jnp.where(take, t[s], best_t)
+        best_i = jnp.where(take, i[s], best_i)
+    return best_t, best_i
+
+
+def _reduce_margin(top1: Array, gidx: Array, top2: Array, axis: str,
+                   num_shards: int, cap: float) -> tuple[Array, Array]:
+    """Combine windowed margin partials -> (pred, margin), matching
+    `repro.kernels.layout.windowed_margin` bit for bit (same clamp, same
+    empty-window pred 0 / margin 0 behaviour)."""
+    t = jax.lax.all_gather(top1, axis)
+    i = jax.lax.all_gather(gidx, axis)
+    r = jax.lax.all_gather(top2, axis)
+    best_t, best_i, best_r = t[0], i[0], r[0]
+    for s in range(1, num_shards):
+        take = (t[s] > best_t) | ((t[s] == best_t) & (i[s] < best_i))
+        # new runner-up: the losing side's top1 joins the candidate set
+        best_r = jnp.where(take, jnp.maximum(r[s], best_t),
+                           jnp.maximum(best_r, t[s]))
+        best_t = jnp.where(take, t[s], best_t)
+        best_i = jnp.where(take, i[s], best_i)
+    top2g = jnp.maximum(best_r, best_t - cap)
+    margin = jnp.where(jnp.isfinite(best_t), best_t - top2g, 0.0)
+    return best_i.astype(jnp.int32), margin.astype(jnp.float32)
 
 
 class MatchEngine:
@@ -141,40 +207,65 @@ class MatchEngine:
                     and n_elements < TINY_ELEMENTS else "kernel")
         return backend_for(name, self.config)
 
-    # -- sharded execution ---------------------------------------------------
+    # -- plan-driven sharded execution ---------------------------------------
 
-    def _run(self, fn, batch_args: tuple, bank, out_ranks: tuple[int, ...]):
-        """Run `fn(*batch_args, bank)`, shard_map-ed over the dp mesh axes
-        when one is installed and the batch divides the device count."""
-        mesh, dp = dp_axes_in_mesh()
-        b = batch_args[0].shape[0]
-        if mesh is None or b % math.prod(mesh.shape[a] for a in dp):
-            return fn(*batch_args, bank)
-        in_specs, out_specs = batch_specs(dp, len(batch_args), out_ranks)
-        # check_rep=False: pallas_call has no replication rule; the bank is
-        # replicated by construction and outputs are purely batch-local.
+    def plan(self, batch: int, num_classes: int,
+             be: backends_lib.MatchBackend) -> tuple[PartitionPlan, object]:
+        """The `PartitionPlan` for a call with these static shapes."""
+        return plan_for(batch=batch, num_classes=num_classes,
+                        bank_shardable=be.supports_bank_sharding)
+
+    def _shard(self, fn, batch_args: tuple, bank_args: tuple,
+               plan: PartitionPlan, mesh, out_specs: tuple):
+        """shard_map `fn(*batch_args, *bank_args)` under the plan: batch
+        operands on the dp axes, class-row operands on the model axis."""
+        in_specs = tuple(plan.batch_spec() for _ in batch_args) + tuple(
+            bank_specs(plan) if isinstance(a, TemplateBank)
+            else plan.class_spec() for a in bank_args)
+        # check_rep=False: pallas_call has no replication rule; outputs are
+        # either batch-local or made identical on every shard by the reduce.
         sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
                             out_specs=out_specs, check_rep=False)
-        return sharded(*batch_args, bank)
+        return sharded(*batch_args, *bank_args)
+
+    @staticmethod
+    def _row0(plan: PartitionPlan) -> Array:
+        """This shard's first global class row (traced, inside shard_map)."""
+        return jax.lax.axis_index(plan.model) * plan.rows_per_shard
 
     # -- raw score entry points (template arrays, not banks) -----------------
+
+    def _raw_scores(self, queries: Array, bank_args: tuple, valid, fn):
+        b = queries.shape[0]
+        c, k = bank_args[0].shape[0], bank_args[0].shape[1]
+        be = self.backend(b * c * k * queries.shape[-1])
+        plan, mesh = self.plan(b, c, be)
+        if not plan.sharded:
+            return fn(be, queries, *bank_args, valid)
+        if valid is None:
+            valid = jnp.ones((c, k), bool)
+
+        def run(q, *rest):
+            return (fn(be, q, *rest),)
+
+        return self._shard(run, (queries,), bank_args + (valid,), plan, mesh,
+                           (plan.batch_class_spec(3),))[0]
 
     def feature_count_scores(self, queries: Array, templates: Array,
                              valid: Array | None = None) -> Array:
         """Eq. 8: queries (B, N) binary, templates (C, K, N) -> (B, C, K)."""
-        b, n = queries.shape
-        c, k, _ = templates.shape
-        be = self.backend(b * c * k * n)
-        return be.feature_count_scores(queries, templates, valid)
+        return self._raw_scores(
+            queries, (templates,), valid,
+            lambda be, q, t, v: be.feature_count_scores(q, t, v))
 
     def similarity_scores(self, queries: Array, lower: Array, upper: Array,
                           valid: Array | None = None) -> Array:
         """Eq. 9-11: queries (B, N), windows (C, K, N) -> (B, C, K)."""
-        b, n = queries.shape
-        c, k, _ = lower.shape
-        be = self.backend(b * c * k * n)
-        return be.similarity_scores(queries, lower, upper, valid,
-                                    alpha=self.config.alpha)
+        alpha = self.config.alpha
+        return self._raw_scores(
+            queries, (lower, upper), valid,
+            lambda be, q, lo, hi, v: be.similarity_scores(q, lo, hi, v,
+                                                          alpha=alpha))
 
     # -- bank entry points ---------------------------------------------------
 
@@ -185,29 +276,55 @@ class MatchEngine:
     def scores(self, queries: Array, bank: TemplateBank) -> Array:
         """(B, C, K) scores for the configured method; invalid rows -inf."""
         be = self.backend(self._elements(queries.shape[0], bank))
+        plan, mesh = self.plan(queries.shape[0], bank.templates.shape[0], be)
+        if not plan.sharded:
+            return be.scores(queries, bank)
 
         def fn(q, bk):
-            # 1-tuple so the output pytree matches _run's out_specs tuple
+            # 1-tuple so the output pytree matches the out_specs tuple
             # (shard_map requires structural agreement, not a bare array)
             return (be.scores(q, bk),)
 
-        return self._run(fn, (queries,), bank, (3,))[0]
+        return self._shard(fn, (queries,), (bank,), plan, mesh,
+                           (plan.batch_class_spec(3),))[0]
+
+    def _classify_via(self, shard_method: str, plain_method: str,
+                      queries: Array, bank: TemplateBank
+                      ) -> tuple[Array, Array]:
+        be = self.backend(self._elements(queries.shape[0], bank))
+        plan, mesh = self.plan(queries.shape[0], bank.templates.shape[0], be)
+        if not plan.sharded:
+            return getattr(be, plain_method)(queries, bank)
+        if not plan.bank_sharded:
+            return self._shard(getattr(be, plain_method), (queries,), (bank,),
+                               plan, mesh,
+                               (plan.batch_spec(1), plan.batch_spec(2)))
+
+        def fn(q, bk):
+            per_class, top1, gidx = getattr(be, shard_method)(
+                q, bk, self._row0(plan))
+            _, pred = _reduce_winner(top1, gidx, plan.model, plan.bank_shards)
+            return pred, per_class
+
+        return self._shard(fn, (queries,), (bank,), plan, mesh,
+                           (plan.batch_spec(1), plan.batch_class_spec(2)))
 
     def classify(self, queries: Array, bank: TemplateBank
                  ) -> tuple[Array, Array]:
         """Eq. 8/11 + Eq. 12 over *binary* queries -> (pred, per_class)."""
-        be = self.backend(self._elements(queries.shape[0], bank))
-        return self._run(be.classify, (queries,), bank, (1, 2))
+        return self._classify_via("classify_shard", "classify", queries, bank)
 
     def classify_features(self, features: Array, bank: TemplateBank
                           ) -> tuple[Array, Array]:
         """Raw features -> binarize -> match -> WTA -> (pred, per_class).
 
         The kernel backend executes this as a single fused pallas_call when
-        the bank fits the fused layout.
+        the bank fits the fused layout; under a bank-sharded plan each
+        device runs the fused kernel on its class-row shard and the winner
+        comes from the cross-shard argmax reduce.
         """
-        be = self.backend(self._elements(features.shape[0], bank))
-        return self._run(be.classify_features, (features,), bank, (1, 2))
+        return self._classify_via("classify_features_shard",
+                                  "classify_features", features, bank)
 
     def classify_features_margin(
         self, features: Array, bank: TemplateBank,
@@ -217,10 +334,11 @@ class MatchEngine:
 
         Returns (pred (B,) int32 global class index, per_class (B, C),
         margin (B,) f32 clamped to the backend's score range). Empty class
-        windows (slot padding) yield pred 0, margin 0.
+        windows (slot padding) yield pred 0, margin 0. Class windows are
+        global indices and may straddle bank shards — the margin reduce is
+        exact either way (the serving registry still aligns tenant windows
+        to shard boundaries so a tenant's rows share a device).
         """
-        import jax.numpy as jnp
-
         b = features.shape[0]
         c = bank.templates.shape[0]
         if class_lo is None:
@@ -228,11 +346,31 @@ class MatchEngine:
         if class_hi is None:
             class_hi = jnp.full((b,), c, jnp.int32)
         be = self.backend(self._elements(b, bank))
+        plan, mesh = self.plan(b, c, be)
+        if not plan.sharded:
+            return be.classify_features_margin(features, bank, class_lo,
+                                               class_hi)
+        if not plan.bank_sharded:
+            def fn(feats, lo, hi, bk):
+                return be.classify_features_margin(feats, bk, lo, hi)
+
+            return self._shard(fn, (features, class_lo, class_hi), (bank,),
+                               plan, mesh, (plan.batch_spec(1),
+                                            plan.batch_spec(2),
+                                            plan.batch_spec(1)))
+        cap = be.margin_cap(features.shape[-1])
 
         def fn(feats, lo, hi, bk):
-            return be.classify_features_margin(feats, bk, lo, hi)
+            per_class, top1, gidx, top2 = be.classify_features_margin_shard(
+                feats, bk, lo, hi, self._row0(plan))
+            pred, margin = _reduce_margin(top1, gidx, top2, plan.model,
+                                          plan.bank_shards, cap)
+            return pred, per_class, margin
 
-        return self._run(fn, (features, class_lo, class_hi), bank, (1, 2, 1))
+        return self._shard(fn, (features, class_lo, class_hi), (bank,), plan,
+                           mesh, (plan.batch_spec(1),
+                                  plan.batch_class_spec(2),
+                                  plan.batch_spec(1)))
 
     def __call__(self, features: Array, bank: TemplateBank,
                  class_lo: Array | None = None,
@@ -242,6 +380,35 @@ class MatchEngine:
             return self.classify_features_margin(features, bank, class_lo,
                                                  class_hi)
         return self.classify_features(features, bank)
+
+    # -- Monte-Carlo programming sweep (device backend) ----------------------
+
+    def sweep_program_noise(self, features: Array, bank: TemplateBank,
+                            keys: Array | int) -> tuple[Array, Array]:
+        """vmap the `sigma_program` programming draw over PRNG keys.
+
+        The device backend's program-once-read-many flow draws ONE noisy
+        array per engine config; this sweeps M independent programming
+        draws in a single vmapped graph, turning point accuracies into
+        confidence intervals on noisy-hardware behaviour.
+
+        keys: an (M,)-leading array of PRNG keys, or an int M (keys are then
+        split from ``PRNGKey(config.seed)``). Returns (pred (M, B) int32,
+        per_class (M, B, C)). Requires ``backend="device"``; at
+        ``sigma_program = 0`` every draw is the ideal array.
+        """
+        be = self.backend(None)
+        if not isinstance(be, backends_lib.DeviceBackend):
+            raise ValueError(
+                "sweep_program_noise requires the device backend; build the "
+                'engine with engine_for(backend="device", device=ACAMConfig('
+                "sigma_program=...))")
+        if isinstance(keys, int):
+            keys = jax.random.split(jax.random.PRNGKey(self.config.seed),
+                                    keys)
+        return jax.vmap(
+            lambda key: be.classify_features_keyed(features, bank, key)
+        )(keys)
 
 
 @functools.lru_cache(maxsize=None)

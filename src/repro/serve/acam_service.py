@@ -118,7 +118,8 @@ class ACAMService:
 
     def __init__(self, num_features: int, *,
                  config: ServiceConfig = ServiceConfig(), k_max: int = 2,
-                 class_bucket: int = 16, backend: str | None = None):
+                 class_bucket: int = 16, backend: str | None = None,
+                 bank_shards: int | None = None):
         """``backend`` pins the scheduler's `repro.match` engine backend
         ("reference" | "kernel" | "device" | "auto"); None resolves the
         process default ONCE, here — pinning it keeps the margin units and
@@ -127,15 +128,25 @@ class ACAMService:
         through the RRAM-CMOS physics models — margins are then matchline
         fractions, and every margin_tau (config default and per-tenant
         overrides, given in match-count units) is rescaled by
-        1/num_features here."""
+        1/num_features here.
+
+        ``bank_shards`` aligns the registry's tenant placement to the bank
+        shards the engine's `PartitionPlan` cuts the super-bank into (class
+        rows over the mesh's model axis). None infers it from the installed
+        mesh (`repro.match.bank_shards_in_mesh`) — construct the service
+        AFTER the launcher installs the mesh, the same ordering contract
+        every jitted mesh consumer has."""
         from repro import match as match_lib
 
         self.config = config
         backend = backend or match_lib.default_backend()
         # device margins are count/N fractions: convert count-unit taus
         self._tau_scale = 1.0 / num_features if backend == "device" else 1.0
+        if bank_shards is None:
+            bank_shards = match_lib.bank_shards_in_mesh()
         self.registry = TemplateBankRegistry(
-            num_features, k_max=k_max, class_bucket=class_bucket)
+            num_features, k_max=k_max, class_bucket=class_bucket,
+            bank_shards=bank_shards)
         self.scheduler = MicroBatchScheduler(
             self.registry, slots=config.slots, method=config.method,
             alpha=config.alpha, backend=backend)

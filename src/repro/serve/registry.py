@@ -26,11 +26,24 @@ rebuilt lazily (`device_bank`, `thresholds_table`) and cached per
 
 The fused margins kernel keeps all ``K_max * padded_classes(C_cap)``
 template rows VMEM-resident; past `repro.match.MAX_FUSED_ROWS` the kernel
-backend automatically falls back to the two-stage kernel + jnp margin
-epilogue — same semantics, still one dispatch per tick. The scheduler's
-dispatch routes through `repro.match.MatchEngine`, so the same super-bank
-also serves the `reference` and `device` (RRAM-physics) backends and
-shards over the data-parallel mesh axes when one is installed.
+backend switches to the class-chunked margins kernel — same semantics,
+still one dispatch per tick. The scheduler's dispatch routes through
+`repro.match.MatchEngine`, so the same super-bank also serves the
+`reference` and `device` (RRAM-physics) backends and executes under the
+engine's 2D `PartitionPlan` when a mesh is installed: the batch shards over
+the data-parallel axes and the super-bank's class rows shard over the
+model axis.
+
+Bank sharding is why the registry is **shard-aligned**: constructed with
+``bank_shards=S`` (the service infers it from the installed mesh via
+`repro.match.bank_shards_in_mesh`), capacity stays divisible by S and the
+allocator never places a tenant's bucket run across a shard boundary —
+every tenant's Eq. 12 class window lives on ONE device, so a request's
+scores come from a single shard and only the tiny (max, argmax) reduce
+crosses devices. Per-shard padding rows keep ``valid = False`` and are
+driven to -inf before the WTA, exactly like bucket padding. Capacity grows
+by doubling, which doubles the shard row count: old shard boundaries are a
+superset of the new ones, so existing placements stay aligned.
 """
 from __future__ import annotations
 
@@ -70,12 +83,19 @@ class TemplateBankRegistry:
 
     def __init__(self, num_features: int, *, k_max: int = 2,
                  class_bucket: int = 16, initial_classes: int = 128,
-                 initial_tenants: int = 8):
+                 initial_tenants: int = 8, bank_shards: int = 1):
         if initial_classes % class_bucket:
             raise ValueError("initial_classes must be a class_bucket multiple")
+        if bank_shards < 1:
+            raise ValueError("bank_shards must be >= 1")
         self.num_features = num_features
         self.k_max = k_max
         self.class_bucket = class_bucket
+        self.bank_shards = bank_shards
+        # capacity must cut into bank_shards equal shards of whole buckets
+        # (the engine's PartitionPlan shards class rows in C_cap/S chunks)
+        align = bank_shards * class_bucket
+        initial_classes = -(-initial_classes // align) * align
         self._c_cap = initial_classes
         self._t_cap = initial_tenants
         n = num_features
@@ -127,16 +147,28 @@ class TemplateBankRegistry:
             "capacity_tenants": self._t_cap,
             "used_class_buckets": int(self._bucket_used.sum()),
             "programmed_rows": int(self._valid.sum()),
+            "bank_shards": self.bank_shards,
+            "rows_per_shard": self.rows_per_shard,
         }
 
     # -- allocation ---------------------------------------------------------
 
+    @property
+    def rows_per_shard(self) -> int:
+        """Class rows per bank shard (== C_cap when unsharded)."""
+        return self._c_cap // self.bank_shards
+
     def _alloc_classes(self, n_buckets: int) -> int:
-        """First-fit contiguous bucket run; grows capacity (doubling) when
-        fragmented/full — the only event that changes device shapes."""
+        """First-fit contiguous bucket run that never straddles a shard
+        boundary; grows capacity (doubling) when fragmented/full — the only
+        event that changes device shapes. Growth doubles the shard size, so
+        new boundaries are a subset of old ones and placements stay legal."""
         while True:
+            shard_buckets = self.rows_per_shard // self.class_bucket
             run = 0
             for i, used in enumerate(self._bucket_used):
+                if i % shard_buckets == 0:
+                    run = 0  # runs restart at every shard boundary
                 run = 0 if used else run + 1
                 if run == n_buckets:
                     start = i - n_buckets + 1

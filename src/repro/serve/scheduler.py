@@ -10,7 +10,12 @@ served by ONE fused classify dispatch per tick:
            -> one `repro.match.MatchEngine.classify_features_margin` call
               over the registry's super-bank with per-slot class windows
               (`[offset, offset + C)` — Eq. 12 never crosses tenants),
-              dp-mesh-sharded by the engine when a mesh is installed
+              executed under the engine's 2D PartitionPlan when a mesh is
+              installed: slots shard over the dp axes, the super-bank's
+              class rows over the model axis (the registry aligns tenant
+              windows to those shards), and the per-slot winner/margin come
+              from the engine's cross-shard (max, argmax) reduce —
+              bit-identical to replicated execution, still ONE dispatch
            -> per-slot tenant-local predictions + confidence margins
 
 The batch shape is pinned to ``slots`` (ragged tails are padded with empty
@@ -104,18 +109,23 @@ class SchedulerStats:
         }
 
 
-@functools.partial(jax.jit, static_argnames=("method", "alpha", "backend"))
+@functools.partial(jax.jit, static_argnames=("method", "alpha", "backend",
+                                             "mesh_gen"))
 def _batched_classify(bank, thr_table, feats, tenant_slot, class_lo, class_hi,
-                      *, method: str, alpha: float, backend: str):
+                      *, method: str, alpha: float, backend: str,
+                      mesh_gen: int):
     """The whole tick on device: ONE threshold-row gather + ONE fused
     classify-with-margins dispatch over the multi-tenant super-bank.
 
     ``backend`` is a *static* argument resolved eagerly by `tick()` (never
     the process default read at trace time), so switching backends between
-    ticks re-traces instead of replaying a stale executable. The engine
-    shards the batch over the data-parallel mesh axes when
-    `repro.distributed.context` holds a mesh (fixed ``slots`` batches
-    divide the dp device count or fall back to single-device)."""
+    ticks re-traces instead of replaying a stale executable. ``mesh_gen``
+    (`distributed.context.generation()`, also static) does the same for the
+    mesh: the engine bakes its `PartitionPlan` — batch over the dp axes,
+    super-bank class rows over the model axis — into this trace, and
+    installing a different mesh between ticks keys a fresh executable
+    instead of silently replaying the stale layout."""
+    del mesh_gen  # cache key only: a new mesh generation forces a re-trace
     thr_rows = jnp.take(thr_table, tenant_slot, axis=0)  # the bank gather
     # per-tenant thresholds -> shared zero threshold: binarize(f, thr_t)
     # == binarize(f - thr_t, 0), and the super-bank's thresholds are zeros
@@ -178,11 +188,14 @@ class MicroBatchScheduler:
             slot_idx[i] = entry.slot
             lo[i], hi[i] = entry.window
 
+        from repro.distributed import context
+
         pred, _, margin = _batched_classify(
             self.registry.device_bank(), self.registry.thresholds_table(),
             jnp.asarray(feats), jnp.asarray(slot_idx), jnp.asarray(lo),
             jnp.asarray(hi), method=self.method, alpha=self.alpha,
-            backend=self.backend or match_lib.default_backend())
+            backend=self.backend or match_lib.default_backend(),
+            mesh_gen=context.generation())
         pred = np.asarray(pred)
         margin = np.asarray(margin)
         self.stats.record_tick(len(batch))

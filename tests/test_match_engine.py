@@ -287,7 +287,206 @@ class TestShardSpecs:
         assert out_specs[0] == P(("pod", "data"), None)
 
     def test_no_mesh_means_no_sharding(self):
-        assert match.dp_axes_in_mesh() == (None, None)
+        from repro.distributed import context
+
+        # save/restore: under REPRO_FORCE_MESH the suite runs with a mesh
+        saved_axes, saved_mesh = context.get(), context.get_mesh()
+        context.clear()
+        try:
+            assert match.dp_axes_in_mesh() == (None, None)
+            plan, mesh = match.plan_for(batch=256, num_classes=128)
+            assert plan is match.REPLICATED and mesh is None
+        finally:
+            if saved_axes is not None:
+                context.set_mesh_axes(saved_axes.dp, saved_axes.model,
+                                      saved_mesh)
+
+
+class TestPartitionPlan:
+    """Unit-level: plan derivation from mesh + static shapes (no devices
+    needed — a (1, 1) host mesh exercises the code paths; the forced
+    multi-device parity lives in tests/test_bank_sharding.py)."""
+
+    def _with_mesh(self, shape):
+        from repro.distributed import context
+
+        mesh = jax.make_mesh(shape, ("data", "model"))
+        context.set_mesh_axes("data", "model", mesh)
+        return mesh
+
+    def _restore(self, saved):
+        from repro.distributed import context
+
+        context.clear()
+        if saved[0] is not None:
+            context.set_mesh_axes(saved[0].dp, saved[0].model, saved[1])
+
+    def test_plan_replicated_on_trivial_mesh(self):
+        from repro.distributed import context
+
+        saved = (context.get(), context.get_mesh())
+        try:
+            self._with_mesh((1, 1))
+            plan, mesh = match.plan_for(batch=256, num_classes=128)
+            assert plan is match.REPLICATED and mesh is None
+        finally:
+            self._restore(saved)
+
+    def test_plan_is_hashable_and_specs(self):
+        from jax.sharding import PartitionSpec as PS
+
+        plan = match.PartitionPlan(dp=("data",), model="model",
+                                   dp_devices=2, bank_shards=2,
+                                   rows_per_shard=64)
+        assert hash(plan) == hash(match.PartitionPlan(
+            dp=("data",), model="model", dp_devices=2, bank_shards=2,
+            rows_per_shard=64))
+        assert plan.batch_sharded and plan.bank_sharded and plan.sharded
+        assert plan.batch_spec() == PS(("data",))
+        assert plan.class_spec() == PS("model")
+        assert plan.batch_class_spec(3) == PS(("data",), "model", None)
+        bank_sp = match.bank_specs(plan)
+        assert bank_sp.templates == PS("model")
+        assert bank_sp.thresholds == PS()
+
+    def test_non_divisible_shapes_stay_replicated_axes(self):
+        plan = match.PartitionPlan()
+        assert not plan.sharded
+        assert plan.batch_spec() == jax.sharding.PartitionSpec(None)
+
+    def test_bank_shards_in_mesh(self):
+        from repro.distributed import context
+
+        saved = (context.get(), context.get_mesh())
+        try:
+            context.clear()
+            assert match.bank_shards_in_mesh() == 1
+            self._with_mesh((1, 1))
+            assert match.bank_shards_in_mesh() == 1
+        finally:
+            self._restore(saved)
+
+
+class TestMeshGenerationRetrace:
+    """Satellite: installing/clearing a mesh re-traces jitted callers that
+    bake the engine's PartitionPlan (mirrors the use_backend retrace test —
+    a (1, 1) mesh never shards, so only the static mesh_gen key changes)."""
+
+    def test_mesh_change_retraces_fused_forward(self):
+        from repro.distributed import context
+
+        key = jax.random.PRNGKey(21)
+        x = jax.random.normal(key, (32, 64))
+        y = jnp.arange(32) % 4
+        bank = templates_lib.generate_templates(x, y, 4, k=1)
+        clf = hybrid.HybridClassifier(None, lambda p, q: q,
+                                      hybrid.ACAMHead(bank=bank,
+                                                      backend="reference"))
+        saved = (context.get(), context.get_mesh())
+        try:
+            p0 = clf.predict(x)
+            size0 = hybrid._fused_forward._cache_size()
+            clf.predict(x)  # same generation: cache hit
+            assert hybrid._fused_forward._cache_size() == size0
+            mesh = jax.make_mesh((1, 1), ("data", "model"))
+            context.set_mesh_axes("data", "model", mesh)
+            p1 = clf.predict(x)
+            assert hybrid._fused_forward._cache_size() == size0 + 1
+            context.clear()
+            p2 = clf.predict(x)
+            assert hybrid._fused_forward._cache_size() == size0 + 2
+            np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+            np.testing.assert_array_equal(np.asarray(p0), np.asarray(p2))
+        finally:
+            context.clear()
+            if saved[0] is not None:
+                context.set_mesh_axes(saved[0].dp, saved[0].model, saved[1])
+
+    def test_mesh_change_retraces_scheduler_tick(self):
+        import time
+
+        from repro.distributed import context
+        from repro.serve import acam_service as svc_lib
+        from repro.serve import scheduler as sched_lib
+
+        saved = (context.get(), context.get_mesh())
+
+        def tick_once(sched, feats):
+            sched.submit(sched_lib.WorkItem(0, "t", feats,
+                                            time.perf_counter()))
+            return [(r.pred_local, round(r.margin, 6)) for r in sched.tick()]
+
+        try:
+            bank, _, protos = svc_lib.make_synthetic_tenant(
+                77, num_classes=6, num_features=64)
+            from repro.serve.registry import TemplateBankRegistry
+
+            reg = TemplateBankRegistry(64)
+            reg.register("t", bank)
+            sched = sched_lib.MicroBatchScheduler(reg, slots=4,
+                                                  backend="reference")
+            feats, _ = svc_lib.sample_tenant_queries(3, protos, 1)
+            out0 = tick_once(sched, feats[0])
+            size0 = sched_lib._batched_classify._cache_size()
+            tick_once(sched, feats[0])  # same generation: cache hit
+            assert sched_lib._batched_classify._cache_size() == size0
+            mesh = jax.make_mesh((1, 1), ("data", "model"))
+            context.set_mesh_axes("data", "model", mesh)
+            out1 = tick_once(sched, feats[0])
+            # mesh_gen is a static jit arg: a new mesh keys a fresh trace
+            assert sched_lib._batched_classify._cache_size() == size0 + 1
+            assert out1 == out0
+        finally:
+            context.clear()
+            if saved[0] is not None:
+                context.set_mesh_axes(saved[0].dp, saved[0].model, saved[1])
+
+
+class TestSweepProgramNoise:
+    """Satellite: Monte-Carlo programming-noise sweep through the engine."""
+
+    def test_per_key_predictions_shape_and_determinism(self):
+        key = jax.random.PRNGKey(31)
+        bank = _bank(key, c=6, k=1, n=64)
+        feats = jax.random.normal(jax.random.fold_in(key, 1), (40, 64))
+        eng = match.engine_for(
+            backend="device", device=acam.ACAMConfig(sigma_program=0.4),
+            seed=5)
+        pred, per_class = eng.sweep_program_noise(feats, bank, 4)
+        assert pred.shape == (4, 40)
+        assert per_class.shape == (4, 40, 6)
+        # draws differ between keys...
+        accs = np.asarray(per_class)
+        assert not np.allclose(accs[0], accs[1])
+        # ...and the sweep is deterministic per config seed
+        pred2, _ = eng.sweep_program_noise(feats, bank, 4)
+        np.testing.assert_array_equal(np.asarray(pred), np.asarray(pred2))
+
+    def test_sigma_zero_draws_collapse_to_ideal(self):
+        key = jax.random.PRNGKey(32)
+        bank = _bank(key, c=5, k=1, n=32)
+        feats = jax.random.normal(jax.random.fold_in(key, 2), (16, 32))
+        eng = match.engine_for(backend="device")
+        pred, per_class = eng.sweep_program_noise(feats, bank, 3)
+        ideal_pred, ideal_pc = eng.classify_features(feats, bank)
+        for m in range(3):
+            np.testing.assert_array_equal(np.asarray(pred[m]),
+                                          np.asarray(ideal_pred))
+            np.testing.assert_allclose(np.asarray(per_class[m]),
+                                       np.asarray(ideal_pc), rtol=1e-6)
+
+    def test_explicit_keys_and_backend_guard(self):
+        key = jax.random.PRNGKey(33)
+        bank = _bank(key, c=4, k=1, n=32)
+        feats = jax.random.normal(jax.random.fold_in(key, 3), (8, 32))
+        eng = match.engine_for(
+            backend="device", device=acam.ACAMConfig(sigma_program=0.2))
+        keys = jax.random.split(jax.random.PRNGKey(7), 5)
+        pred, _ = eng.sweep_program_noise(feats, bank, keys)
+        assert pred.shape == (5, 8)
+        with pytest.raises(ValueError):
+            match.engine_for(backend="kernel").sweep_program_noise(
+                feats, bank, 2)
 
 
 def run_sub(code: str, timeout=600) -> str:
