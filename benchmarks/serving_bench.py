@@ -57,25 +57,51 @@ NUM_FEATURES = 64
 NUM_CLASSES = 10
 
 
+def make_spec(slots: int, *, requests: int, backend: str | None = None,
+              bank_shards: int = 1, install_mesh: bool = False):
+    """The bench's one `ServiceSpec`: every measurement constructs through
+    the spec path (`HybridService.from_spec`), never the legacy keywords.
+    Taus ride in explicit match-count units; the service converts to the
+    backend's native margin units itself."""
+    from repro import match as match_lib
+    from repro.match.config import EngineConfig
+    from repro.serve import spec as spec_lib
+
+    return spec_lib.ServiceSpec(
+        registry=spec_lib.RegistrySpec(
+            num_features=NUM_FEATURES,
+            initial_classes=spec_lib.aligned_classes(bank_shards)),
+        engine=EngineConfig(backend=backend or match_lib.default_backend(),
+                            margin=True),
+        mesh=spec_lib.MeshSpec(bank_shards=bank_shards,
+                               install=install_mesh),
+        scheduler=spec_lib.SchedulerSpec(slots=slots),
+        cascade=spec_lib.CascadeSpec(tau=8.0, tau_units="count",
+                                     max_queue=max(requests, 4096)),
+    )
+
+
 def bench_service(tenants: int, slots: int, *, requests: int | None = None,
                   seed: int = 0, backend: str | None = None,
-                  classes: int = NUM_CLASSES) -> dict:
-    """Serve a mixed-tenant burst through a fresh service; return metrics.
+                  classes: int = NUM_CLASSES, bank_shards: int | None = None,
+                  install_mesh: bool = False) -> dict:
+    """Serve a mixed-tenant burst through a fresh spec-built service.
 
-    ``backend`` pins the scheduler's `repro.match` engine backend;
-    margin_tau stays in match-count units — the service converts to the
-    device backend's matchline-fraction units itself. The service infers
-    ``bank_sharding`` from whatever mesh is installed when this runs
-    (`bank_scaling_sweep` toggles it).
+    ``bank_shards=None`` keeps the historical behaviour of aligning to
+    whatever mesh is installed when this runs (`bank_scaling_sweep`
+    toggles it); an explicit value + ``install_mesh=True`` lets the spec
+    own the mesh end to end.
     """
+    from repro import match as match_lib
     from repro.serve import acam_service as svc_lib
+    from repro.serve.control import HybridService
 
     requests = requests or max(4 * slots, 128)
-    svc = svc_lib.ACAMService(
-        NUM_FEATURES,
-        config=svc_lib.ServiceConfig(slots=slots,
-                                     max_queue=max(requests, 4096)),
-        backend=backend)
+    if bank_shards is None:
+        bank_shards = match_lib.bank_shards_in_mesh()
+    svc = HybridService.from_spec(make_spec(
+        slots, requests=requests, backend=backend, bank_shards=bank_shards,
+        install_mesh=install_mesh))
     protos = []
     for t in range(tenants):
         bank, head, p = svc_lib.make_synthetic_tenant(
@@ -161,6 +187,94 @@ def bank_scaling_sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
     return entries
 
 
+def reshard_bench(*, seed: int = 0, tenants: int = 8, slots: int = 64,
+                  to_shards: int = 2) -> dict | None:
+    """Live-reshard downtime: boot a spec-built service at ``bank_shards=1``
+    (mesh owned by the spec), load it, then `reconfigure` to ``to_shards``
+    mid-stream and measure the drain->resume wall time. Asserts the
+    post-reshard scheduler keeps ONE sharded dispatch per tick and that
+    predictions are bit-identical across the transition.
+
+    Needs a forced host mesh (``REPRO_FORCE_MESH=DxM`` with D*M divisible
+    by ``to_shards``); returns None (with a note) when unavailable.
+    """
+    import jax
+
+    from repro import match as match_lib
+    from repro.distributed import context, forcemesh
+    from repro.serve import acam_service as svc_lib
+    from repro.serve.control import HybridService
+
+    if forcemesh.env_spec() is None or len(jax.devices()) % to_shards:
+        print("skipping reshard row: set REPRO_FORCE_MESH (devices must "
+              f"divide {to_shards})")
+        return None
+    context.clear()
+    requests = 4 * slots
+    svc = HybridService.from_spec(make_spec(slots, requests=requests,
+                                            bank_shards=1,
+                                            install_mesh=True))
+    protos = []
+    for t in range(tenants):
+        bank, head, p = svc_lib.make_synthetic_tenant(
+            seed * 1000 + t, num_classes=NUM_CLASSES,
+            num_features=NUM_FEATURES)
+        svc.register_tenant(f"t{t}", bank, head=head)
+        protos.append(p)
+    rng = np.random.RandomState(seed)
+    tenant_of = rng.randint(0, tenants, size=requests)
+    reqs = []
+    for i, t in enumerate(tenant_of):
+        feats, _ = svc_lib.sample_tenant_queries(seed + i, protos[t], 1,
+                                                 noise=0.8)
+        reqs.append(svc_lib.ClassifyRequest(f"t{t}", feats[0]))
+    before = [(r.tenant_id, r.pred, r.escalated, round(r.margin, 6))
+              for r in svc.serve(reqs)]
+
+    # mid-stream: enqueue a burst, reconfigure (drains it), resume sharded
+    for req in reqs[:slots]:
+        svc.submit(req)
+    report = svc.reconfigure(svc.spec._replace(
+        mesh=svc.spec.mesh._replace(bank_shards=to_shards)))
+    assert len(report.drained) == slots, "drain lost queued work"
+    assert svc.registry.bank_shards == to_shards
+    assert match_lib.bank_shards_in_mesh() == to_shards
+
+    # the tick's shapes now derive a bank-sharded plan: the scheduler's ONE
+    # dispatch per tick executes 2D-sharded (batch over data, class rows
+    # over model) — this is the actual sharded-dispatch assertion, since
+    # classify_dispatches == ticks holds by construction
+    plan, _ = match_lib.plan_for(batch=slots,
+                                 num_classes=svc.registry.capacity_classes)
+    assert plan.bank_shards == to_shards, plan
+    svc.reset_metrics()
+    after = [(r.tenant_id, r.pred, r.escalated, round(r.margin, 6))
+             for r in svc.serve(reqs)]
+    assert after == before, "reshard changed served results"
+    m = svc.metrics()
+    assert m["classify_dispatches"] == m["ticks"], m
+    context.clear()
+    entry = {
+        "tenants": tenants, "slots": slots, "requests": requests,
+        "classes": NUM_CLASSES, "matching_backend": "default",
+        "bank_sharding": to_shards,
+        "reshard_downtime_ms": round(report.downtime_s * 1e3, 3),
+        "tenants_moved": report.tenants_moved,
+        "requests_per_s": m["requests_per_s"],
+        "latency_p50_ms": m["latency_p50_ms"],
+        "latency_p99_ms": m["latency_p99_ms"],
+        "escalation_rate": m["escalation_rate"],
+        "nj_per_request": m["nj_per_request"],
+        "occupancy": m["occupancy"],
+        "classify_dispatches": m["classify_dispatches"],
+    }
+    print(f"reshard 1->{to_shards}: downtime "
+          f"{entry['reshard_downtime_ms']:.1f} ms "
+          f"({entry['tenants_moved']} tenants moved, bit-identical, "
+          f"{m['classify_dispatches']} sharded dispatches)")
+    return entry
+
+
 def sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
     tenant_grid = SMOKE_TENANTS if smoke else TENANT_SWEEP
     slot_grid = SMOKE_SLOTS if smoke else SLOT_SWEEP
@@ -184,6 +298,10 @@ def sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
     _report(entries[-1])
     # bank-scaling rows: replicated vs sharded super-bank (the crossover)
     entries.extend(bank_scaling_sweep(smoke=smoke, seed=seed))
+    # live-reshard row: spec-built service, 1 -> 2 shards mid-stream
+    reshard = reshard_bench(seed=seed)
+    if reshard is not None:
+        entries.append(reshard)
     return entries
 
 
@@ -211,13 +329,20 @@ def run() -> list[dict]:
     entries = sweep(smoke=fast)
     write_bench_json(entries)
     return [{
-        "name": f"serving_t{e['tenants']}_c{e['classes']}_s{e['slots']}"
-        + ("" if e["bank_sharding"] == 1 else f"_shard{e['bank_sharding']}")
-        + ("" if e["matching_backend"] == "default"
-           else f"_{e['matching_backend']}"),
+        "name": (f"serving_reshard_1to{e['bank_sharding']}"
+                 if "reshard_downtime_ms" in e else
+                 f"serving_t{e['tenants']}_c{e['classes']}_s{e['slots']}"
+                 + ("" if e["bank_sharding"] == 1
+                    else f"_shard{e['bank_sharding']}")
+                 + ("" if e["matching_backend"] == "default"
+                    else f"_{e['matching_backend']}")),
         "us_per_call": round(1e6 / e["requests_per_s"], 2)
         if e["requests_per_s"] else 0.0,
-        "derived": (f"{e['requests_per_s']:.0f}req/s,"
+        "derived": (f"downtime={e['reshard_downtime_ms']}ms,"
+                    f"moved={e['tenants_moved']},"
+                    f"{e['requests_per_s']:.0f}req/s"
+                    if "reshard_downtime_ms" in e else
+                    f"{e['requests_per_s']:.0f}req/s,"
                     f"esc={e['escalation_rate']:.3f},"
                     f"{e['nj_per_request']:.2f}nJ/req"),
     } for e in entries]
@@ -227,7 +352,21 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: small tenant/slot grid")
+    ap.add_argument("--reshard", action="store_true",
+                    help="run ONLY the live-reshard smoke: boot the "
+                         "spec-built service at bank_shards=1 under "
+                         "REPRO_FORCE_MESH, reconfigure to 2 mid-stream, "
+                         "assert bit-identity + one sharded dispatch per "
+                         "tick, report drain->resume downtime")
     args = ap.parse_args()
+    if args.reshard:
+        from repro.distributed import forcemesh
+
+        forcemesh.apply_xla_flags()
+        entry = reshard_bench()
+        if entry is None:
+            raise SystemExit("--reshard needs REPRO_FORCE_MESH=DxM")
+        return
     if args.smoke:
         os.environ["REPRO_BENCH_FAST"] = "1"
     for r in run():

@@ -83,6 +83,51 @@ def main():
                   f"{float(jnp.std(accs)):.4f} "
                   f"(min {float(jnp.min(accs)):.4f}, "
                   f"max {float(jnp.max(accs)):.4f})")
+        # tiled deployments program one physical array PER bank shard
+        # (device_noise="per_shard": array s keyed fold_in(seed, s)) — a
+        # distinct noise layout from the single-array draw above
+        eng = match.engine_for(
+            backend="device", device=acam.ACAMConfig(sigma_program=0.10),
+            seed=7, device_noise="per_shard")
+        preds, _ = eng.sweep_program_noise(feats_te, head.bank, args.mc,
+                                           bank_shards=2)
+        accs = jnp.mean(preds == te.labels[None, :], axis=1)
+        print(f"   MC x{args.mc} sigma=0.10 x2arr: "
+              f"{float(jnp.mean(accs)):.4f} +/- {float(jnp.std(accs)):.4f} "
+              f"(per-shard programming keys, 2 arrays)")
+
+    print("== serving: the same head behind the declarative front door")
+    # ONE ServiceSpec stands up the whole serving stack (registry ->
+    # scheduler -> cascade); the spec is JSON-round-trippable, so this
+    # exact configuration can ship as a file (launch/serve --spec).
+    import numpy as np
+
+    from repro.match.config import EngineConfig
+    from repro.serve import acam_service as svc_lib
+    from repro.serve import spec as spec_lib
+    from repro.serve.control import HybridService
+
+    spec = spec_lib.ServiceSpec(
+        registry=spec_lib.RegistrySpec(num_features=head.bank.num_features),
+        engine=EngineConfig(backend=match.default_backend(), margin=True),
+        mesh=spec_lib.MeshSpec(bank_shards=1, install=False),
+        scheduler=spec_lib.SchedulerSpec(slots=64),
+        cascade=spec_lib.CascadeSpec(tau=8.0, tau_units="count"),
+    )
+    assert spec_lib.ServiceSpec.from_json(spec.to_json()) == spec
+    svc = HybridService.from_spec(spec)
+    dense = params["head"]
+    svc.register_tenant("wearable-0", head.bank,
+                        head=(np.asarray(dense["w"]),
+                              np.asarray(dense["b"])))
+    responses = svc.serve([
+        svc_lib.ClassifyRequest("wearable-0", f) for f in np.asarray(feats_te)])
+    m = svc.metrics()
+    acc_svc = float(np.mean([r.pred == y
+                             for r, y in zip(responses, te.labels)]))
+    print(f"   cascade accuracy {acc_svc:.4f} over {m['completed']} requests "
+          f"({m['classify_dispatches']} fused dispatches, escalation rate "
+          f"{m['escalation_rate']:.3f}, {m['nj_per_request']:.2f} nJ/req)")
 
     print("== energy (paper §V-D arithmetic)")
     nums = energy.paper_numbers()

@@ -65,10 +65,14 @@ def run_lm(args) -> None:
 
 
 def run_acam(args) -> None:
+    from repro import match
     from repro.core import hybrid
     from repro.data import synthetic
+    from repro.match.config import EngineConfig
     from repro.models import cnn
     from repro.serve import acam_service as svc_lib
+    from repro.serve import spec as spec_lib
+    from repro.serve.control import HybridService
     from repro.train import cnn_trainer as T
 
     n = 80 if args.fast else 200
@@ -80,16 +84,23 @@ def run_acam(args) -> None:
     head = hybrid.fit_acam_head(lambda p, x: cnn.student_features(p, x)[0],
                                 params, gtr, tr.labels, 10, k=1)
 
-    # the trained hybrid classifier becomes tenant 0 of the service; its
-    # dense softmax head is the cascade's escalation target. --tenants adds
-    # synthetic co-tenants so the scheduler coalesces across tenants.
-    # --backend pins the repro.match engine backend (device = RRAM physics;
-    # the service converts margin tau to matchline-fraction units itself).
-    svc = svc_lib.ACAMService(
-        head.bank.num_features,
-        config=svc_lib.ServiceConfig(slots=args.batch_size,
-                                     margin_tau=args.margin_tau),
-        backend=args.backend)
+    # ONE declarative ServiceSpec is the whole front door: engine backend
+    # (--backend; device = RRAM physics), tick size, cascade tau with
+    # EXPLICIT units ("count" — the service converts to matchline fractions
+    # itself when the backend senses them). The trained hybrid classifier
+    # becomes tenant 0; its dense softmax head is the escalation target.
+    # --tenants adds synthetic co-tenants so the scheduler coalesces.
+    spec = spec_lib.ServiceSpec(
+        registry=spec_lib.RegistrySpec(
+            num_features=head.bank.num_features),
+        engine=EngineConfig(backend=args.backend or match.default_backend(),
+                            margin=True),
+        mesh=spec_lib.MeshSpec(bank_shards=1, install=False),
+        scheduler=spec_lib.SchedulerSpec(slots=args.batch_size),
+        cascade=spec_lib.CascadeSpec(tau=args.margin_tau,
+                                     tau_units="count"),
+    )
+    svc = HybridService.from_spec(spec)
     dense = params["head"]
     svc.register_tenant("wearable-0", head.bank,
                         head=(np.asarray(dense["w"]), np.asarray(dense["b"])))

@@ -21,12 +21,15 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def make_serving_mesh(*, bank_shards: int = 1):
+def make_serving_mesh(*, bank_shards: int = 1,
+                      axis_names: tuple[str, str] = ("data", "model")):
     """(data = devices/bank_shards, model = bank_shards) over the available
     devices — the ACAM serving layout: request batches shard over "data",
     the template super-bank's class rows shard over "model" (the engine's
     `repro.match.plan.PartitionPlan`). ``bank_shards=1`` degenerates to
-    pure data parallelism (bank replicated).
+    pure data parallelism (bank replicated). ``axis_names`` follows a
+    `ServiceSpec.mesh` with custom axis names
+    (`repro.serve.control.install_mesh` is the usual caller).
 
     On CPU, force host devices first (``REPRO_FORCE_MESH`` /
     `repro.distributed.forcemesh.apply_xla_flags` before jax initialises).
@@ -37,4 +40,4 @@ def make_serving_mesh(*, bank_shards: int = 1):
             f"bank_shards={bank_shards} must divide the {ndev} available "
             "devices")
     return jax.make_mesh((ndev // bank_shards, bank_shards),
-                         ("data", "model"))
+                         tuple(axis_names))

@@ -8,12 +8,13 @@ Two workloads behind one CLI:
           the `tp`/`fsdp_tp` shardings whose lowering the decode_32k /
           long_500k dry-run cells prove.
 
-  acam  — the multi-tenant hybrid-classifier service
-          (`repro.serve.acam_service.ACAMService`): per-tenant template
-          banks stacked into one super-bank, micro-batched cross-tenant
-          scheduling with ONE fused classify dispatch per tick, and the
-          confidence cascade (accept-at-ACAM vs escalate to the CNN head)
-          with paper §V-D energy attribution.
+  acam  — the multi-tenant hybrid-classifier service, constructed through
+          the ONE front door: a declarative `repro.serve.spec.ServiceSpec`
+          (built from the CLI flags, or loaded verbatim via
+          ``--spec service.json``) handed to
+          `repro.serve.control.HybridService.from_spec`, which owns the
+          whole boot sequence — mesh install -> registry -> scheduler ->
+          cascade — so there is no constructor ordering to get wrong.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --requests 8 --max-new 16 --temperature 0.8
@@ -21,6 +22,8 @@ Two workloads behind one CLI:
       --tenants 8 --requests 256 --slots 64
   PYTHONPATH=src python -m repro.launch.serve --workload acam \
       --backend device   # serve through the RRAM-CMOS physics models
+  PYTHONPATH=src python -m repro.launch.serve --workload acam \
+      --spec service.json --print-spec   # declarative boot from a file
   REPRO_FORCE_MESH=2x2 PYTHONPATH=src python -m repro.launch.serve \
       --workload acam --bank-shards 2   # 2D-sharded: batch over "data",
                                         # super-bank class rows over "model"
@@ -34,19 +37,27 @@ import jax
 import numpy as np
 
 
-def install_acam_mesh(bank_shards: int) -> None:
-    """Install the (data, model=bank_shards) serving mesh into the
-    distributed context — BEFORE the service is constructed, so the
-    registry aligns tenant placement to the same shards the engine's
-    `PartitionPlan` cuts the super-bank along."""
-    from repro.distributed import context
-    from repro.launch.mesh import make_serving_mesh
+def build_acam_spec(args):
+    """The launcher's flag surface -> one `ServiceSpec` (or load the spec
+    verbatim from ``--spec file.json`` — flags are then ignored)."""
+    from repro import match as match_lib
+    from repro.match.config import EngineConfig
+    from repro.serve import spec as spec_lib
 
-    mesh = make_serving_mesh(bank_shards=bank_shards)
-    context.set_mesh_axes("data", "model", mesh)
-    shape = dict(mesh.shape)
-    print(f"installed serving mesh data={shape['data']} "
-          f"model={shape['model']} ({len(mesh.devices.flat)} devices)")
+    if args.spec:
+        return spec_lib.ServiceSpec.from_file(args.spec)
+    return spec_lib.ServiceSpec(
+        registry=spec_lib.RegistrySpec(
+            num_features=args.features,
+            initial_classes=spec_lib.aligned_classes(args.bank_shards)),
+        engine=EngineConfig(backend=args.backend
+                            or match_lib.default_backend(), margin=True,
+                            device_noise=args.device_noise),
+        mesh=spec_lib.MeshSpec(bank_shards=args.bank_shards),
+        scheduler=spec_lib.SchedulerSpec(slots=args.slots),
+        cascade=spec_lib.CascadeSpec(tau=args.margin_tau,
+                                     tau_units="count"),
+    )
 
 
 def run_lm(args) -> dict:
@@ -73,21 +84,27 @@ def run_lm(args) -> dict:
 
 def run_acam(args) -> dict:
     from repro.serve import acam_service as svc_lib
+    from repro.serve.control import HybridService
 
-    if args.bank_shards > 1:
-        install_acam_mesh(args.bank_shards)
-    # margin_tau is in match-count units for every backend: the service
-    # rescales to matchline fractions itself when backend == "device";
-    # bank_shards is inferred from the just-installed mesh
-    cfg = svc_lib.ServiceConfig(slots=args.slots, margin_tau=args.margin_tau)
-    svc = svc_lib.ACAMService(args.features, config=cfg,
-                              backend=args.backend)
+    # ONE declarative spec drives the whole stack; from_spec installs the
+    # (data, model=bank_shards) mesh itself, then builds registry ->
+    # scheduler -> cascade in order. margin_tau rides in the spec with
+    # explicit units ("count"); the service converts to the backend's
+    # native margin units (matchline fractions for "device") itself.
+    spec = build_acam_spec(args)
+    if args.print_spec:
+        print(spec.to_json())
+    svc = HybridService.from_spec(spec)
+    n_features = spec.registry.num_features
+    if spec.mesh.bank_shards > 1:
+        print(f"installed serving mesh model={spec.mesh.bank_shards} "
+              f"({len(jax.devices())} devices)")
 
     protos = {}
     for t in range(args.tenants):
         bank, head, p = svc_lib.make_synthetic_tenant(
             args.seed * 1000 + t, num_classes=args.classes,
-            num_features=args.features)
+            num_features=n_features)
         tid = f"tenant-{t}"
         svc.register_tenant(tid, bank, head=head)
         protos[tid] = p
@@ -136,6 +153,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
     # acam
+    ap.add_argument("--spec", default=None, metavar="FILE.json",
+                    help="boot the acam service from a declarative "
+                         "ServiceSpec JSON file (other acam flags ignored)")
+    ap.add_argument("--print-spec", action="store_true",
+                    help="print the resolved ServiceSpec JSON before boot")
     ap.add_argument("--tenants", type=int, default=8)
     ap.add_argument("--slots", type=int, default=64)
     ap.add_argument("--classes", type=int, default=10,
@@ -157,6 +179,11 @@ def main(argv=None) -> dict:
                          "a model mesh axis of this size (must divide the "
                          "device count; on CPU set REPRO_FORCE_MESH or "
                          "XLA_FLAGS host-device count first)")
+    ap.add_argument("--device-noise", default="global",
+                    choices=("global", "per_shard"),
+                    help="sigma_program noise semantics for the device "
+                         "backend: per_shard programs one physical array "
+                         "per bank shard (fold_in(seed, shard))")
     args = ap.parse_args(argv)
     if args.requests is None:
         args.requests = 8 if args.workload == "lm" else 256

@@ -30,7 +30,8 @@ from repro.match.backends import (MAX_FUSED_ROWS, TINY_ELEMENTS,
 from repro.match.config import EngineConfig
 from repro.match.engine import (MatchEngine, bank_specs, batch_specs,
                                 default_backend, dp_axes_in_mesh, engine_for,
-                                set_default_backend, use_backend)
+                                engine_from_config, set_default_backend,
+                                use_backend)
 from repro.match.plan import (REPLICATED, PartitionPlan, bank_shards_in_mesh,
                               plan_for)
 
@@ -41,6 +42,6 @@ __all__ = [
     "shard_window_top2", "similarity_scores_ref", "window_margin",
     "winner_take_all", "EngineConfig", "MatchEngine", "bank_specs",
     "batch_specs", "default_backend", "dp_axes_in_mesh", "engine_for",
-    "set_default_backend", "use_backend", "REPLICATED", "PartitionPlan",
-    "bank_shards_in_mesh", "plan_for",
+    "engine_from_config", "set_default_backend", "use_backend", "REPLICATED",
+    "PartitionPlan", "bank_shards_in_mesh", "plan_for",
 ]

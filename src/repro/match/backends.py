@@ -425,13 +425,22 @@ class DeviceBackend(MatchBackend):
         self.acam_config = config.device or acam_lib.ACAMConfig()
 
     @property
+    def per_shard_noise(self) -> bool:
+        """Per-shard programming keys (`EngineConfig.device_noise`): real
+        tiled deployments program one physical array per bank shard, so
+        array s draws its write noise from ``fold_in(PRNGKey(seed), s)``."""
+        return self.config.device_noise == "per_shard"
+
+    @property
     def supports_bank_sharding(self) -> bool:
-        # sigma_program > 0 draws one noise field per *programmed array*;
-        # programming per-shard sub-arrays with the same key would realise a
-        # different noise layout than the replicated array, breaking the
-        # engine's bit-identical-to-replicated contract. The ideal array
-        # (sigma = 0) is row-independent and shards exactly.
-        return self.acam_config.sigma_program <= 0.0
+        # "global" noise: sigma_program > 0 draws one noise field per
+        # *programmed array*; programming per-shard sub-arrays with the same
+        # key would realise a different noise layout than the replicated
+        # array, breaking the engine's bit-identical-to-replicated contract.
+        # The ideal array (sigma = 0) is row-independent and shards exactly,
+        # and "per_shard" noise makes the tiled layout the *defined*
+        # semantics (one programming key per shard), lifting the refusal.
+        return self.acam_config.sigma_program <= 0.0 or self.per_shard_noise
 
     def _program_rows(self, lower: Array, upper: Array, valid_flat: Array,
                       key: Array | None = None) -> acam_lib.ProgrammedACAM:
@@ -440,8 +449,18 @@ class DeviceBackend(MatchBackend):
         return acam_lib.program(lower, upper, valid_flat, self.acam_config,
                                 key)
 
-    def program_bank(self, bank: TemplateBank,
-                     key: Array | None = None) -> acam_lib.ProgrammedACAM:
+    def _bank_rows(self, bank: TemplateBank) -> tuple[Array, Array, Array]:
+        c, k, n = bank.templates.shape
+        if self.config.method == "feature_count":
+            lo = hi = bank.templates.reshape(c * k, n)
+        else:
+            lo = bank.lower.reshape(c * k, n)
+            hi = bank.upper.reshape(c * k, n)
+        return lo, hi, bank.valid.reshape(c * k)
+
+    def program_bank(self, bank: TemplateBank, key: Array | None = None,
+                     *, shard_index: Array | int = 0,
+                     bank_shards: int = 1) -> acam_lib.ProgrammedACAM:
         """The acam.py bridge: bank -> programmed (C*K, N) TXL array.
 
         Public so calibration flows (`acam.calibrate_windows`,
@@ -449,14 +468,39 @@ class DeviceBackend(MatchBackend):
         matches against. ``key`` overrides the config-seed programming draw
         (the Monte-Carlo sweep's per-draw keys); None keeps the
         program-once-read-many default.
+
+        Under ``device_noise="per_shard"`` the programming key is
+        ``fold_in(base, shard_index)``: inside a bank-sharded shard_map the
+        engine passes this shard's index, and ``bank_shards > 1`` *emulates*
+        the S-array tiling on a replicated bank — class rows are programmed
+        in S per-shard groups keyed ``fold_in(base, s)``, bit-identical to
+        what the sharded execution realises per device.
         """
-        c, k, n = bank.templates.shape
-        if self.config.method == "feature_count":
-            lo = hi = bank.templates.reshape(c * k, n)
-        else:
-            lo = bank.lower.reshape(c * k, n)
-            hi = bank.upper.reshape(c * k, n)
-        return self._program_rows(lo, hi, bank.valid.reshape(c * k), key)
+        lo, hi, valid = self._bank_rows(bank)
+        sigma = self.acam_config.sigma_program
+        if sigma <= 0.0 or not self.per_shard_noise:
+            return self._program_rows(lo, hi, valid, key)
+        base = key if key is not None \
+            else jax.random.PRNGKey(self.config.seed)
+        if bank_shards <= 1:
+            return self._program_rows(lo, hi, valid,
+                                      jax.random.fold_in(base, shard_index))
+        c = bank.templates.shape[0]
+        if c % bank_shards:
+            raise ValueError(
+                f"per-shard programming emulation needs class rows ({c}) "
+                f"divisible by bank_shards ({bank_shards})")
+        rows = lo.shape[0] // bank_shards  # = (C/S) * K rows per array
+        progs = [self._program_rows(lo[s * rows:(s + 1) * rows],
+                                    hi[s * rows:(s + 1) * rows],
+                                    valid[s * rows:(s + 1) * rows],
+                                    jax.random.fold_in(base, s))
+                 for s in range(bank_shards)]
+        return acam_lib.ProgrammedACAM(
+            lower=jnp.concatenate([p.lower for p in progs]),
+            upper=jnp.concatenate([p.upper for p in progs]),
+            valid=jnp.concatenate([p.valid for p in progs]),
+            config=progs[0].config)
 
     def _sense_rows(self, prog: acam_lib.ProgrammedACAM, queries: Array,
                     c: int, k: int) -> Array:
@@ -489,18 +533,52 @@ class DeviceBackend(MatchBackend):
         return self._sense_rows(self.program_bank(bank), queries, c, k)
 
     def classify_features_keyed(self, features: Array, bank: TemplateBank,
-                                key: Array) -> tuple[Array, Array]:
+                                key: Array, *, bank_shards: int = 1
+                                ) -> tuple[Array, Array]:
         """One Monte-Carlo draw: program the bank with an explicit PRNG key
         (instead of the config-seed key) and classify.
 
         vmap-safe over ``key`` — `MatchEngine.sweep_program_noise` maps this
         over a batch of keys to turn the single programming sample of the
-        program-once flow into per-draw confidence intervals.
+        program-once flow into per-draw confidence intervals. Under
+        ``device_noise="per_shard"``, ``bank_shards=S`` programs the S-array
+        tiling (array s keyed ``fold_in(key, s)``).
         """
         c, k, _ = bank.templates.shape
-        prog = self.program_bank(bank, key)
+        prog = self.program_bank(bank, key, bank_shards=bank_shards)
         q = quant.binarize(features, bank.thresholds)
         return classify_scores(self._sense_rows(prog, q, c, k))
+
+    # -- shard-local entry points (bank-sharded plans) -----------------------
+    #
+    # Each device programs its OWN physical array: under "per_shard" noise
+    # the programming key folds in the shard index (row0 / C_local), so
+    # shard s realises the same noise field whether it runs sharded on
+    # device s or is emulated by `program_bank(..., bank_shards=S)`.
+
+    def _shard_scores(self, queries: Array, bank: TemplateBank, row0: Array
+                      ) -> Array:
+        c, k, _ = bank.templates.shape
+        prog = self.program_bank(bank, shard_index=row0 // c)
+        return self._sense_rows(prog, queries, c, k)
+
+    def classify_shard(self, queries, bank, row0):
+        pred, per_class = classify_scores(
+            self._shard_scores(queries, bank, row0))
+        return per_class, jnp.max(per_class, axis=-1), \
+            (pred + row0).astype(jnp.int32)
+
+    def classify_features_shard(self, features, bank, row0):
+        q = quant.binarize(features, bank.thresholds)
+        return self.classify_shard(q, bank, row0)
+
+    def classify_features_margin_shard(self, features, bank, class_lo,
+                                       class_hi, row0):
+        q = quant.binarize(features, bank.thresholds)
+        _, per_class = classify_scores(self._shard_scores(q, bank, row0))
+        top1, gidx, top2 = shard_window_top2(per_class, class_lo, class_hi,
+                                             row0)
+        return per_class, top1, gidx, top2
 
     def margin_cap(self, num_features: int) -> float:
         return 1.0  # sense outputs live in [0, 1] matchline units

@@ -25,6 +25,18 @@ globals, keywords and environment variables:
   device   `repro.core.acam.ACAMConfig` for the device-physics backend
            (cell flavour, sigma_program, ...); None = ACAMConfig() defaults
   seed     PRNG seed for `sigma_program > 0` programming noise
+  device_noise
+           how `sigma_program > 0` write noise maps onto bank shards
+           (device backend only):
+             "global"     ONE physical array draws one noise field — the
+                          backend declines bank sharding, since per-shard
+                          sub-arrays keyed alike would realise a different
+                          layout than the replicated array.
+             "per_shard"  real tiled deployments program one array PER
+                          shard: array s (class rows [s*C/S, (s+1)*C/S))
+                          draws its noise from fold_in(PRNGKey(seed), s).
+                          Lifts the sharding refusal; an unsharded call is
+                          the S = 1 tiling (fold_in(seed, 0)).
 """
 from __future__ import annotations
 
@@ -33,6 +45,8 @@ from typing import NamedTuple
 from repro.core.acam import ACAMConfig
 
 METHODS = ("feature_count", "similarity")
+
+DEVICE_NOISE_MODES = ("global", "per_shard")
 
 
 class EngineConfig(NamedTuple):
@@ -43,6 +57,7 @@ class EngineConfig(NamedTuple):
     margin: bool = False
     device: ACAMConfig | None = None
     seed: int = 0
+    device_noise: str = "global"
 
 
 def validate(config: EngineConfig, backend_names: tuple[str, ...]) -> None:
@@ -56,4 +71,7 @@ def validate(config: EngineConfig, backend_names: tuple[str, ...]) -> None:
             f"{('auto',) + backend_names}")
     if config.block is not None and len(tuple(config.block)) != 3:
         raise ValueError(f"block must be (bm, bn, bk), got {config.block!r}")
+    if config.device_noise not in DEVICE_NOISE_MODES:
+        raise ValueError(f"unknown device_noise {config.device_noise!r}; "
+                         f"use {DEVICE_NOISE_MODES}")
     hash(config)  # fail fast: configs must stay usable as static jit args

@@ -384,7 +384,9 @@ class MatchEngine:
     # -- Monte-Carlo programming sweep (device backend) ----------------------
 
     def sweep_program_noise(self, features: Array, bank: TemplateBank,
-                            keys: Array | int) -> tuple[Array, Array]:
+                            keys: Array | int, *,
+                            bank_shards: int | None = None
+                            ) -> tuple[Array, Array]:
         """vmap the `sigma_program` programming draw over PRNG keys.
 
         The device backend's program-once-read-many flow draws ONE noisy
@@ -396,6 +398,13 @@ class MatchEngine:
         split from ``PRNGKey(config.seed)``). Returns (pred (M, B) int32,
         per_class (M, B, C)). Requires ``backend="device"``; at
         ``sigma_program = 0`` every draw is the ideal array.
+
+        Under ``device_noise="per_shard"`` each draw programs the S-array
+        tiling (array s keyed ``fold_in(draw_key, s)`` — the same noise
+        layout a bank-sharded plan realises per device). ``bank_shards``
+        picks S; None infers it from the installed mesh
+        (`repro.match.bank_shards_in_mesh`, 1 when the class count does not
+        divide). Ignored under "global" noise (one array, one field).
         """
         be = self.backend(None)
         if not isinstance(be, backends_lib.DeviceBackend):
@@ -403,11 +412,18 @@ class MatchEngine:
                 "sweep_program_noise requires the device backend; build the "
                 'engine with engine_for(backend="device", device=ACAMConfig('
                 "sigma_program=...))")
+        shards = 1
+        if be.per_shard_noise:
+            c = bank.templates.shape[0]
+            if bank_shards is None:
+                bank_shards = plan_lib.bank_shards_in_mesh()
+            shards = bank_shards if c % bank_shards == 0 else 1
         if isinstance(keys, int):
             keys = jax.random.split(jax.random.PRNGKey(self.config.seed),
                                     keys)
         return jax.vmap(
-            lambda key: be.classify_features_keyed(features, bank, key)
+            lambda key: be.classify_features_keyed(features, bank, key,
+                                                   bank_shards=shards)
         )(keys)
 
 
@@ -416,11 +432,18 @@ def _engine_for(config: EngineConfig) -> MatchEngine:
     return MatchEngine(config)
 
 
+def engine_from_config(config: EngineConfig) -> MatchEngine:
+    """Memoised engine for a fully-resolved `EngineConfig` (the spec path:
+    `ServiceSpec.engine` and the scheduler tick hand the whole config over
+    as one hashable static value instead of re-spelling its fields)."""
+    return _engine_for(config)
+
+
 def engine_for(method: str = "feature_count", alpha: float = 1.0,
                backend: str | None = None,
                block: tuple[int, int, int] | None = None,
-               margin: bool = False, device=None, seed: int = 0
-               ) -> MatchEngine:
+               margin: bool = False, device=None, seed: int = 0,
+               device_noise: str = "global") -> MatchEngine:
     """Memoised engine per config; `backend=None` -> the process default.
 
     The default is resolved HERE (eagerly, at the caller boundary), so a
@@ -430,5 +453,6 @@ def engine_for(method: str = "feature_count", alpha: float = 1.0,
     cfg = EngineConfig(method=method, alpha=alpha,
                        backend=backend or default_backend(),
                        block=None if block is None else tuple(block),
-                       margin=margin, device=device, seed=seed)
+                       margin=margin, device=device, seed=seed,
+                       device_noise=device_noise)
     return _engine_for(cfg)

@@ -1,4 +1,12 @@
-"""Multi-tenant ACAM classification service (the hybrid cascade front door).
+"""Multi-tenant ACAM classification service (the hybrid cascade core).
+
+The intended front door is the spec path — ONE declarative
+`repro.serve.spec.ServiceSpec` handed to
+`repro.serve.control.HybridService.from_spec`, which owns construction
+order (mesh -> registry -> scheduler -> cascade) and live transitions
+(`reconfigure`: reshard / backend swap / tau retune). The keyword
+constructor below survives as a deprecated shim that builds the same spec
+(`repro.serve.spec.from_legacy`).
 
 Turns the fused Pallas classify kernel into a service tier:
 
@@ -30,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +95,9 @@ class ServiceConfig:
 
 @dataclasses.dataclass
 class _TenantRuntime:
-    margin_tau: float | None  # None: cascade disabled (no head)
+    has_head: bool  # False: cascade disabled (no escalation target)
+    raw_tau: float | None  # per-tenant override in the spec's tau_units
+    margin_tau: float | None  # resolved to native units; None: no head
     backend_j: float  # Eq. 14 energy of this tenant's programmed rows
 
 
@@ -120,48 +131,98 @@ class ACAMService:
                  config: ServiceConfig = ServiceConfig(), k_max: int = 2,
                  class_bucket: int = 16, backend: str | None = None,
                  bank_shards: int | None = None):
-        """``backend`` pins the scheduler's `repro.match` engine backend
+        """DEPRECATED shim over the spec path: prefer
+        `repro.serve.control.HybridService.from_spec(ServiceSpec(...))`,
+        which owns mesh install order and enables live `reconfigure`. These
+        keywords are bridged 1:1 through `repro.serve.spec.from_legacy`.
+
+        ``backend`` pins the scheduler's `repro.match` engine backend
         ("reference" | "kernel" | "device" | "auto"); None resolves the
-        process default ONCE, here — pinning it keeps the margin units and
-        the served backend consistent for the service's lifetime even if
-        the process default changes later. "device" serves every tick
-        through the RRAM-CMOS physics models — margins are then matchline
-        fractions, and every margin_tau (config default and per-tenant
-        overrides, given in match-count units) is rescaled by
-        1/num_features here.
+        process default ONCE, here. "device" serves every tick through the
+        RRAM-CMOS physics models — margins are then matchline fractions,
+        and every margin_tau (given in match-count units) is rescaled by
+        1/num_features (`ServiceSpec.tau_scale`).
 
         ``bank_shards`` aligns the registry's tenant placement to the bank
-        shards the engine's `PartitionPlan` cuts the super-bank into (class
-        rows over the mesh's model axis). None infers it from the installed
-        mesh (`repro.match.bank_shards_in_mesh`) — construct the service
-        AFTER the launcher installs the mesh, the same ordering contract
-        every jitted mesh consumer has."""
+        shards the engine's `PartitionPlan` cuts the super-bank into. None
+        infers it from the installed mesh — which is the ordering footgun
+        this constructor is deprecated for: with no mesh installed it
+        silently resolves to 1, so it now warns. `from_spec` makes the
+        shard count explicit and installs the mesh itself."""
         from repro import match as match_lib
+        from repro.serve import spec as spec_lib
 
-        self.config = config
-        backend = backend or match_lib.default_backend()
-        # device margins are count/N fractions: convert count-unit taus
-        self._tau_scale = 1.0 / num_features if backend == "device" else 1.0
         if bank_shards is None:
+            from repro.distributed import context
+
+            if context.get_mesh() is None:
+                warnings.warn(
+                    "ACAMService(bank_shards=None) with no mesh installed: "
+                    "bank_shards silently resolves to 1. If you meant to "
+                    "shard the super-bank, install the serving mesh BEFORE "
+                    "constructing the service — or switch to the spec path "
+                    "(repro.serve.control.HybridService.from_spec), which "
+                    "owns mesh install order and makes this impossible.",
+                    UserWarning, stacklevel=2)
             bank_shards = match_lib.bank_shards_in_mesh()
+        self._build(spec_lib.from_legacy(
+            num_features, config=config, k_max=k_max,
+            class_bucket=class_bucket, backend=backend,
+            bank_shards=bank_shards))
+
+    def _build(self, spec) -> None:
+        """Construct every tier from a validated `ServiceSpec` in the one
+        correct order: registry -> scheduler -> cascade. (The mesh, when
+        the spec owns it, is installed before this runs —
+        `HybridService.from_spec`.)"""
+        spec.validate()
+        self.spec = spec
         self.registry = TemplateBankRegistry(
-            num_features, k_max=k_max, class_bucket=class_bucket,
-            bank_shards=bank_shards)
+            spec.registry.num_features, k_max=spec.registry.k_max,
+            class_bucket=spec.registry.class_bucket,
+            initial_classes=spec.registry.initial_classes,
+            initial_tenants=spec.registry.initial_tenants,
+            bank_shards=spec.mesh.bank_shards)
         self.scheduler = MicroBatchScheduler(
-            self.registry, slots=config.slots, method=config.method,
-            alpha=config.alpha, backend=backend)
+            self.registry, slots=spec.scheduler.slots, engine=spec.engine)
         self._tenants: dict[str, _TenantRuntime] = {}
         self._head_w: np.ndarray | None = None  # (T_cap, N, C_head)
         self._head_b: np.ndarray | None = None  # (T_cap, C_head)
         self._head_cache: tuple[int, jnp.ndarray, jnp.ndarray] | None = None
         self._head_gen = 0
         self._next_id = 0
-        effective = int(round(config.frontend_macs
-                              * (1.0 - config.frontend_sparsity)))
-        effective -= config.softmax_head_ops
-        self._frontend_j = energy_lib.frontend_energy(
-            effective, paper_faithful=config.paper_faithful)
+        self._apply_cascade(spec)
         self._m = _Metrics()
+
+    def _apply_cascade(self, spec) -> None:
+        """(Re)derive everything the cascade spec controls: the legacy
+        `ServiceConfig` view, tau unit conversion, the §V-D front-end
+        energy, and every registered tenant's resolved threshold. Called at
+        build AND by the control plane's live transitions."""
+        casc = spec.cascade
+        self.spec = spec
+        self.config = ServiceConfig(
+            slots=spec.scheduler.slots, method=spec.engine.method,
+            alpha=spec.engine.alpha, margin_tau=casc.tau,
+            max_queue=casc.max_queue, frontend_macs=casc.frontend_macs,
+            frontend_sparsity=casc.frontend_sparsity,
+            softmax_head_ops=casc.softmax_head_ops,
+            paper_faithful=casc.paper_faithful)
+        self._tau_scale = spec.tau_scale()
+        effective = int(round(casc.frontend_macs
+                              * (1.0 - casc.frontend_sparsity)))
+        effective -= casc.softmax_head_ops
+        self._frontend_j = energy_lib.frontend_energy(
+            effective, paper_faithful=casc.paper_faithful)
+        for rt in self._tenants.values():
+            rt.margin_tau = self._resolve_tau(rt.raw_tau) if rt.has_head \
+                else None
+
+    def _resolve_tau(self, raw: float | None) -> float:
+        """Spec-units tau (per-tenant override or the cascade default) ->
+        the served backend's native margin units."""
+        tau = self.spec.cascade.tau if raw is None else raw
+        return tau * self._tau_scale
 
     # -- tenant lifecycle ---------------------------------------------------
 
@@ -204,10 +265,10 @@ class ACAMService:
     def _install(self, tenant_id, slot, valid_rows, head, margin_tau):
         if head is not None:
             self._head_store(slot, head[0], head[1])
-        tau = self.config.margin_tau if margin_tau is None else margin_tau
-        tau *= self._tau_scale
         self._tenants[tenant_id] = _TenantRuntime(
-            margin_tau=tau if head is not None else None,
+            has_head=head is not None, raw_tau=margin_tau,
+            margin_tau=self._resolve_tau(margin_tau)
+            if head is not None else None,
             backend_j=energy_lib.backend_energy(valid_rows,
                                                 self.registry.num_features))
 
@@ -217,7 +278,7 @@ class ACAMService:
         dispatch gathers from)."""
         entry = self.registry.get(tenant_id)
         c = entry.num_classes
-        if self._head_w is None or self._tenants[tenant_id].margin_tau is None:
+        if self._head_w is None or not self._tenants[tenant_id].has_head:
             raise RegistryError(f"tenant {tenant_id!r} has no head")
         return (self._head_w[entry.slot, :, :c].copy(),
                 self._head_b[entry.slot, :c].copy())
@@ -336,14 +397,20 @@ class ACAMService:
         return {r.item.request_id: int(pred[i])
                 for i, r in enumerate(escalate)}
 
-    def serve(self, requests: list[ClassifyRequest]) -> list[ClassifyResponse]:
-        """Submit a burst and run ticks until the queue drains."""
-        for req in requests:
-            self.submit(req)
+    def drain(self) -> list[ClassifyResponse]:
+        """Run ticks until the queue empties (the control plane's quiesce
+        step: every pending request is served under the CURRENT config
+        before a live transition switches anything)."""
         out: list[ClassifyResponse] = []
         while self.scheduler.qsize:
             out.extend(self.step())
         return out
+
+    def serve(self, requests: list[ClassifyRequest]) -> list[ClassifyResponse]:
+        """Submit a burst and run ticks until the queue drains."""
+        for req in requests:
+            self.submit(req)
+        return self.drain()
 
     def metrics(self) -> dict:
         return self._m.as_dict(self.scheduler.stats)

@@ -1,0 +1,189 @@
+"""The hybrid service's control plane: build-from-spec + live transitions.
+
+`HybridService` is the front door the launchers, benchmarks and examples
+construct through. It owns the two things the scattered constructor surface
+never could:
+
+**Construction order.** `HybridService.from_spec(spec)` executes the one
+correct boot sequence — mesh install -> registry -> scheduler -> cascade —
+so the old footgun (constructing `ACAMService` before `install_acam_mesh`
+and silently getting `bank_shards=1`) cannot happen: the shard count comes
+from the spec, and the spec's mesh is installed first.
+
+**Runtime transitions.** `service.reconfigure(new_spec)` diffs the current
+spec against the new one and executes the minimal live transition over a
+drained scheduler:
+
+    bank_shards change   LIVE RESHARD: drain -> `registry.reshard` re-packs
+                         bucket runs to the new shard boundaries (zero
+                         tenant re-registrations; slots, thresholds, head
+                         tables and template rows survive) -> install the
+                         new (data, model) mesh (the mesh generation
+                         counter forces the scheduler's re-trace) -> the
+                         next tick gathers the re-packed super-bank and
+                         dispatches under the new `PartitionPlan`.
+                         Predictions, margins and escalation decisions are
+                         bit-identical across the transition (the engine's
+                         cross-shard reduce contract). One documented
+                         exception: the device backend under
+                         `device_noise="per_shard"` with `sigma_program > 0`
+                         — there the shard count IS the physical tiling
+                         (one programmed array per shard, keyed
+                         fold_in(seed, s)), so resharding re-programs the
+                         arrays and legitimately re-realises the write
+                         noise, exactly as re-tiling real RRAM would.
+    engine change        backend/method/noise swap: the scheduler's next
+                         tick dispatches under the new `EngineConfig` (a
+                         fresh static jit key); taus are re-resolved into
+                         the new backend's native margin units.
+    scheduler change     new tick size: the scheduler is rebuilt over the
+                         same registry (the queue is empty post-drain).
+    cascade change       taus / energy attribution / admission bound are
+                         re-derived for every registered tenant in place.
+
+Transitions the spec cannot express live (a different feature dim, k_max
+or bucket size — the banks themselves would change shape) raise
+`ReconfigureError` before anything mutates.
+
+The report returned by `reconfigure` carries the drained responses, the
+action log, and the drain->resume wall time (`downtime_s`) — the number
+`benchmarks/serving_bench.py --reshard` tracks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.serve.acam_service import ACAMService, ClassifyResponse
+from repro.serve.spec import MeshSpec, ServiceSpec
+
+
+class ReconfigureError(ValueError):
+    """The requested spec transition cannot be executed live."""
+
+
+#: registry fields that shape the banks themselves — never live-mutable.
+_FROZEN_REGISTRY_FIELDS = ("num_features", "k_max", "class_bucket")
+
+
+@dataclasses.dataclass
+class ReconfigureReport:
+    """What a live transition did (and what it cost)."""
+
+    spec: ServiceSpec  # the spec now in force
+    actions: tuple[str, ...]  # human-readable transition log
+    drained: list[ClassifyResponse]  # requests served during the quiesce
+    downtime_s: float  # drain start -> resume wall time
+    tenants_moved: int = 0  # reshard: tenants whose class offset changed
+
+
+def install_mesh(mesh: MeshSpec):
+    """Build and install the (data = devices/bank_shards, model =
+    bank_shards) serving mesh described by a `MeshSpec`. Returns the mesh.
+
+    This is the spec path's replacement for the old order-sensitive
+    launcher helper: `HybridService.from_spec` calls it BEFORE any service
+    tier exists, so registry placement and the engine's `PartitionPlan`
+    can never disagree about the shard count.
+    """
+    from repro.distributed import context
+    from repro.launch.mesh import make_serving_mesh
+
+    built = make_serving_mesh(bank_shards=mesh.bank_shards,
+                              axis_names=(mesh.data_axis, mesh.model_axis))
+    context.set_mesh_axes(mesh.data_axis, mesh.model_axis, built)
+    return built
+
+
+class HybridService(ACAMService):
+    """`ACAMService` + the declarative lifecycle: one spec in, live
+    transitions after. (The inherited legacy keyword constructor still
+    works; `from_spec` is the intended front door.)"""
+
+    @classmethod
+    def from_spec(cls, spec: ServiceSpec) -> "HybridService":
+        """Validate, install the spec's mesh (when it owns one), then build
+        registry -> scheduler -> cascade in order."""
+        spec.validate()
+        svc = cls.__new__(cls)
+        if spec.mesh.install:
+            install_mesh(spec.mesh)
+        svc._build(spec)
+        return svc
+
+    def reconfigure(self, new_spec: ServiceSpec) -> ReconfigureReport:
+        """Diff specs and execute the minimal live transition (see module
+        docstring). Pending requests are drained — served under the OLD
+        config — before anything switches; their responses are returned in
+        the report so no work is lost."""
+        new_spec.validate()
+        old = self.spec
+        for field in _FROZEN_REGISTRY_FIELDS:
+            if getattr(new_spec.registry, field) != \
+                    getattr(old.registry, field):
+                raise ReconfigureError(
+                    f"registry.{field} cannot change live "
+                    f"({getattr(old.registry, field)} -> "
+                    f"{getattr(new_spec.registry, field)}): the registered "
+                    "banks would change shape; build a fresh service")
+        if new_spec.mesh.install:
+            # fail BEFORE any mutation: a mesh the devices cannot form must
+            # not strand a resharded registry behind the old mesh
+            import jax
+
+            ndev = len(jax.devices())
+            if ndev % new_spec.mesh.bank_shards:
+                raise ReconfigureError(
+                    f"mesh.bank_shards={new_spec.mesh.bank_shards} does not "
+                    f"divide the {ndev} available devices; nothing was "
+                    "changed")
+        if new_spec == old:
+            return ReconfigureReport(spec=old, actions=(), drained=[],
+                                     downtime_s=0.0)
+
+        t0 = time.perf_counter()
+        drained = self.drain()
+        actions: list[str] = []
+        moved = 0
+
+        reshard = new_spec.mesh.bank_shards != old.mesh.bank_shards
+        if reshard:
+            moved = self.registry.reshard(new_spec.mesh.bank_shards)
+            actions.append(
+                f"resharded super-bank {old.mesh.bank_shards} -> "
+                f"{new_spec.mesh.bank_shards} ({moved} tenant runs "
+                f"re-packed, 0 re-registrations)")
+        if new_spec.mesh != old.mesh or reshard:
+            if new_spec.mesh.install:
+                install_mesh(new_spec.mesh)
+                actions.append(
+                    f"installed ({new_spec.mesh.data_axis}, "
+                    f"{new_spec.mesh.model_axis}={new_spec.mesh.bank_shards})"
+                    " mesh (generation bump -> scheduler re-trace)")
+
+        if new_spec.engine != old.engine:
+            self.scheduler.set_engine(new_spec.engine)
+            actions.append(f"engine {old.engine.backend}/{old.engine.method}"
+                           f" -> {new_spec.engine.backend}/"
+                           f"{new_spec.engine.method}")
+        if new_spec.scheduler != old.scheduler:
+            from repro.serve.scheduler import MicroBatchScheduler
+
+            stats = self.scheduler.stats  # cumulative view stays coherent
+            self.scheduler = MicroBatchScheduler(
+                self.registry, slots=new_spec.scheduler.slots,
+                engine=new_spec.engine)
+            stats.slots = new_spec.scheduler.slots
+            self.scheduler.stats = stats
+            actions.append(f"scheduler slots {old.scheduler.slots} -> "
+                           f"{new_spec.scheduler.slots}")
+        if new_spec.cascade != old.cascade:
+            actions.append("cascade re-derived (tau/energy/admission)")
+        # always re-derive the cascade view: tau units depend on the engine
+        # backend/method as much as on the cascade block itself
+        self._apply_cascade(new_spec)
+        self.spec = new_spec
+        return ReconfigureReport(spec=new_spec, actions=tuple(actions),
+                                 drained=drained,
+                                 downtime_s=time.perf_counter() - t0,
+                                 tenants_moved=moved)

@@ -35,7 +35,8 @@ the data-parallel axes and the super-bank's class rows shard over the
 model axis.
 
 Bank sharding is why the registry is **shard-aligned**: constructed with
-``bank_shards=S`` (the service infers it from the installed mesh via
+``bank_shards=S`` (the spec path passes `ServiceSpec.mesh.bank_shards`
+explicitly; the legacy service shim infers it from the installed mesh via
 `repro.match.bank_shards_in_mesh`), capacity stays divisible by S and the
 allocator never places a tenant's bucket run across a shard boundary —
 every tenant's Eq. 12 class window lives on ONE device, so a request's
@@ -43,7 +44,10 @@ scores come from a single shard and only the tiny (max, argmax) reduce
 crosses devices. Per-shard padding rows keep ``valid = False`` and are
 driven to -inf before the WTA, exactly like bucket padding. Capacity grows
 by doubling, which doubles the shard row count: old shard boundaries are a
-superset of the new ones, so existing placements stay aligned.
+superset of the new ones, so existing placements stay aligned. `reshard`
+re-packs every bucket run to NEW shard boundaries in place (live
+resharding, driven by `HybridService.reconfigure`) — tenants keep their
+ids, slots, thresholds and template rows; only offsets move.
 """
 from __future__ import annotations
 
@@ -287,6 +291,83 @@ class TemplateBankRegistry:
                                 self.generation)
         self._tenants[tenant_id] = entry
         return entry
+
+    # -- live resharding ----------------------------------------------------
+
+    def _pack(self, entries, cap: int, bank_shards: int):
+        """First-fit placement of existing bucket runs into a fresh bank of
+        ``cap`` rows cut into ``bank_shards`` shards (runs restart at shard
+        boundaries, exactly like `_alloc_classes`). Returns
+        [(entry, new_offset)] or None when the capacity cannot hold them."""
+        shard_buckets = (cap // bank_shards) // self.class_bucket
+        used = np.zeros(cap // self.class_bucket, bool)
+        out = []
+        for e in entries:
+            n_buckets = e.c_bucket // self.class_bucket
+            if n_buckets > shard_buckets:
+                return None
+            placed = None
+            run = 0
+            for i in range(len(used)):
+                if i % shard_buckets == 0:
+                    run = 0
+                run = 0 if used[i] else run + 1
+                if run == n_buckets:
+                    start = i - n_buckets + 1
+                    used[start:i + 1] = True
+                    placed = start * self.class_bucket
+                    break
+            if placed is None:
+                return None
+            out.append((e, placed))
+        return out
+
+    def reshard(self, bank_shards: int) -> int:
+        """Re-pack every tenant's bucket run to new shard boundaries
+        WITHOUT re-registering anyone: tenant ids, slots, thresholds, head
+        tables (slot-indexed, service-side), template rows and `valid_rows`
+        all survive — only class-row offsets move (and capacity grows when
+        the new alignment needs more rows; growth keeps doubling from
+        there, so later boundaries remain a superset). Returns the number
+        of tenants whose offset changed.
+
+        The caller (the control plane) drains the scheduler first; queued
+        work is safe regardless because placements are resolved at tick
+        time (`lookup`), never at submit time.
+        """
+        if bank_shards < 1:
+            raise ValueError("bank_shards must be >= 1")
+        if bank_shards == self.bank_shards:
+            return 0
+        align = bank_shards * self.class_bucket
+        cap = -(-self._c_cap // align) * align
+        order = sorted(self._tenants.values(), key=lambda e: e.offset)
+        while (placement := self._pack(order, cap, bank_shards)) is None:
+            cap *= 2  # doubling keeps future growth boundary-compatible
+        src = {name: getattr(self, name)
+               for name in ("_templates", "_lower", "_upper")}
+        for name, arr in src.items():
+            setattr(self, name, np.zeros((cap,) + arr.shape[1:], arr.dtype))
+        valid_src, self._valid = self._valid, np.zeros((cap, self.k_max),
+                                                       bool)
+        self._bucket_used = np.zeros(cap // self.class_bucket, bool)
+        moved = 0
+        for entry, offset in placement:
+            lo, hi = entry.offset, entry.offset + entry.c_bucket
+            for name, arr in src.items():
+                getattr(self, name)[offset:offset + entry.c_bucket] = \
+                    arr[lo:hi]
+            self._valid[offset:offset + entry.c_bucket] = valid_src[lo:hi]
+            start = offset // self.class_bucket
+            self._bucket_used[start:start + entry.c_bucket
+                              // self.class_bucket] = True
+            moved += offset != entry.offset
+            self._tenants[entry.tenant_id] = dataclasses.replace(
+                entry, offset=offset, generation=self.generation + 1)
+        self._c_cap = cap
+        self.bank_shards = bank_shards
+        self._bump()
+        return moved
 
     def evict(self, tenant_id: str) -> None:
         """Drop a tenant: invalidate its rows, free its bucket range + slot."""

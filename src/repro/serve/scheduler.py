@@ -109,17 +109,17 @@ class SchedulerStats:
         }
 
 
-@functools.partial(jax.jit, static_argnames=("method", "alpha", "backend",
-                                             "mesh_gen"))
+@functools.partial(jax.jit, static_argnames=("config", "mesh_gen"))
 def _batched_classify(bank, thr_table, feats, tenant_slot, class_lo, class_hi,
-                      *, method: str, alpha: float, backend: str,
-                      mesh_gen: int):
+                      *, config, mesh_gen: int):
     """The whole tick on device: ONE threshold-row gather + ONE fused
     classify-with-margins dispatch over the multi-tenant super-bank.
 
-    ``backend`` is a *static* argument resolved eagerly by `tick()` (never
-    the process default read at trace time), so switching backends between
-    ticks re-traces instead of replaying a stale executable. ``mesh_gen``
+    ``config`` is the full `repro.match.EngineConfig`, a *static* argument
+    resolved eagerly by `tick()` (never the process default read at trace
+    time), so switching backends — or any other engine knob, e.g. the
+    device-physics noise config of a spec-built service — between ticks
+    re-traces instead of replaying a stale executable. ``mesh_gen``
     (`distributed.context.generation()`, also static) does the same for the
     mesh: the engine bakes its `PartitionPlan` — batch over the dp axes,
     super-bank class rows over the model axis — into this trace, and
@@ -130,25 +130,53 @@ def _batched_classify(bank, thr_table, feats, tenant_slot, class_lo, class_hi,
     # per-tenant thresholds -> shared zero threshold: binarize(f, thr_t)
     # == binarize(f - thr_t, 0), and the super-bank's thresholds are zeros
     shifted = feats - thr_rows
-    eng = match_lib.engine_for(method=method, alpha=alpha, backend=backend)
+    eng = match_lib.engine_from_config(config)
     return eng.classify_features_margin(shifted, bank, class_lo, class_hi)
 
 
 class MicroBatchScheduler:
-    """Fixed-slot continuous micro-batching over a `TemplateBankRegistry`."""
+    """Fixed-slot continuous micro-batching over a `TemplateBankRegistry`.
+
+    The matching setup is ONE `repro.match.EngineConfig` (`engine`, the
+    spec path: `ServiceSpec.engine` is passed through verbatim). The
+    legacy keyword surface (`method`/`alpha`/`backend`) still works and
+    builds the same config; `backend=None` keeps its historical meaning —
+    re-resolve the process default at every tick.
+    """
 
     def __init__(self, registry: TemplateBankRegistry, *, slots: int = 64,
                  method: str = "feature_count", alpha: float = 1.0,
-                 backend: str | None = None):
+                 backend: str | None = None,
+                 engine: match_lib.EngineConfig | None = None):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         self.registry = registry
         self.slots = slots
-        self.method = method
-        self.alpha = alpha
-        self.backend = backend
+        if engine is not None:
+            self.engine_config = engine
+            self.backend = engine.backend
+        else:
+            self.engine_config = match_lib.EngineConfig(
+                method=method, alpha=alpha, backend=backend or "auto",
+                margin=True)
+            self.backend = backend
         self.stats = SchedulerStats(slots=slots)
         self._queue: deque[WorkItem] = deque()
+
+    @property
+    def method(self) -> str:
+        return self.engine_config.method
+
+    @property
+    def alpha(self) -> float:
+        return self.engine_config.alpha
+
+    def set_engine(self, engine: match_lib.EngineConfig) -> None:
+        """Live engine swap (the control plane's backend transition): the
+        next tick dispatches under the new config — a fresh static jit key,
+        so it re-traces instead of replaying the old executable."""
+        self.engine_config = engine
+        self.backend = engine.backend
 
     @property
     def qsize(self) -> int:
@@ -190,12 +218,12 @@ class MicroBatchScheduler:
 
         from repro.distributed import context
 
+        cfg = self.engine_config._replace(
+            backend=self.backend or match_lib.default_backend())
         pred, _, margin = _batched_classify(
             self.registry.device_bank(), self.registry.thresholds_table(),
             jnp.asarray(feats), jnp.asarray(slot_idx), jnp.asarray(lo),
-            jnp.asarray(hi), method=self.method, alpha=self.alpha,
-            backend=self.backend or match_lib.default_backend(),
-            mesh_gen=context.generation())
+            jnp.asarray(hi), config=cfg, mesh_gen=context.generation())
         pred = np.asarray(pred)
         margin = np.asarray(margin)
         self.stats.record_tick(len(batch))

@@ -1,0 +1,272 @@
+"""ServiceSpec: ONE declarative value object for the whole hybrid service.
+
+Before this module, standing up the paper's cascade took five uncoordinated
+surfaces — `EngineConfig`, `TemplateBankRegistry(...)`,
+`MicroBatchScheduler(...)`, `ACAMService(...)` and launcher flags — plus an
+order-sensitive footgun (`install_acam_mesh` had to run *before* service
+construction or `bank_shards` silently resolved to 1). `ServiceSpec` folds
+all of it into one hashable, JSON-round-trippable NamedTuple tree:
+
+    spec = ServiceSpec(
+        registry=RegistrySpec(num_features=64),
+        engine=EngineConfig(backend="kernel"),
+        mesh=MeshSpec(bank_shards=2),
+        scheduler=SchedulerSpec(slots=64),
+        cascade=CascadeSpec(tau=8.0, tau_units="count"),
+    )
+    spec.validate()                         # eager cross-field checks
+    svc = HybridService.from_spec(spec)     # repro.serve.control owns
+                                            # mesh -> registry -> scheduler
+                                            # -> cascade build order
+    svc.reconfigure(spec._replace(...))     # minimal live transition
+
+Design rules:
+
+  * **hashable** — every leaf is a primitive or a NamedTuple of primitives
+    (EngineConfig / ACAMConfig included), so a spec can key caches and ride
+    as a static jit argument exactly like `EngineConfig` does;
+  * **JSON round-trippable** — ``ServiceSpec.from_json(spec.to_json()) ==
+    spec`` exactly (tuples, None, nested configs), so launch flags, files
+    (`--spec service.json`) and the control plane share one format;
+  * **eagerly validated** — `validate()` raises on cross-field conflicts
+    the old constructor pile only hit at serve time (or never): the device
+    backend refusing bank shards under "global" `sigma_program` noise,
+    registry capacity not divisible into the requested shards, a fraction
+    tau above the matchline cap.
+
+Tau carries **explicit units** (`CascadeSpec.tau_units`): "count" =
+match-count margins (0..N, the digital feature-count backends), "fraction"
+= matchline-fraction margins (0..1 — the device backend's sense outputs,
+and the similarity method's Eq. 11 scores). The service converts between
+the spec's units and the backend's native units itself (`tau_scale`), so
+the same spec value serves every backend without callers rescaling.
+"""
+from __future__ import annotations
+
+import json
+from typing import NamedTuple
+
+from repro.core.acam import ACAMConfig
+from repro.match.config import EngineConfig
+
+
+class MeshSpec(NamedTuple):
+    """How the service's mesh is laid out (and whether the control plane
+    installs it — `HybridService.from_spec` builds a
+    (data = devices/bank_shards, model = bank_shards) mesh when ``install``
+    is set, which is what kills the old construct-after-install footgun)."""
+
+    bank_shards: int = 1  # super-bank class-row shards (model-axis size)
+    data_axis: str = "data"
+    model_axis: str = "model"
+    install: bool = True  # False: run against whatever mesh is installed
+
+
+class RegistrySpec(NamedTuple):
+    """`TemplateBankRegistry` sizing + capacity policy."""
+
+    num_features: int = 64
+    k_max: int = 2
+    class_bucket: int = 16
+    initial_classes: int = 128
+    initial_tenants: int = 8
+
+
+class SchedulerSpec(NamedTuple):
+    """`MicroBatchScheduler` knobs (the micro-batch tick size)."""
+
+    slots: int = 64
+
+
+class CascadeSpec(NamedTuple):
+    """Confidence cascade + paper §V-D energy attribution."""
+
+    tau: float = 8.0  # accept threshold, in tau_units
+    tau_units: str = "count"  # "count" (0..N) | "fraction" (0..1)
+    max_queue: int = 4096  # admission bound
+    frontend_macs: int = 23_785_120
+    frontend_sparsity: float = 0.80
+    softmax_head_ops: int = 7_850
+    paper_faithful: bool = True
+
+
+TAU_UNITS = ("count", "fraction")
+
+
+class ServiceSpec(NamedTuple):
+    """The one front door: everything needed to build (and live-retarget)
+    a `HybridService`, as a single hashable value."""
+
+    registry: RegistrySpec = RegistrySpec()
+    engine: EngineConfig = EngineConfig()
+    mesh: MeshSpec = MeshSpec()
+    scheduler: SchedulerSpec = SchedulerSpec()
+    cascade: CascadeSpec = CascadeSpec()
+
+    # -- validation ---------------------------------------------------------
+
+    def validate(self) -> "ServiceSpec":
+        """Eager cross-field validation; returns self so call sites chain."""
+        from repro.match import backend_names
+        from repro.match.config import validate as validate_engine
+
+        validate_engine(self.engine, backend_names())
+        reg, mesh, sched, casc = (self.registry, self.mesh, self.scheduler,
+                                  self.cascade)
+        if reg.num_features < 1:
+            raise ValueError(f"num_features must be >= 1, got "
+                             f"{reg.num_features}")
+        if reg.k_max < 1 or reg.class_bucket < 1 or reg.initial_tenants < 1:
+            raise ValueError("k_max, class_bucket and initial_tenants must "
+                             f"be >= 1, got {reg}")
+        if mesh.bank_shards < 1:
+            raise ValueError(f"bank_shards must be >= 1, got "
+                             f"{mesh.bank_shards}")
+        align = mesh.bank_shards * reg.class_bucket
+        if reg.initial_classes < 1 or reg.initial_classes % align:
+            raise ValueError(
+                f"registry capacity ({reg.initial_classes} classes) must cut "
+                f"into {mesh.bank_shards} shards of whole "
+                f"{reg.class_bucket}-row buckets (a multiple of {align})")
+        if mesh.data_axis == mesh.model_axis:
+            raise ValueError(f"mesh axes must differ, got "
+                             f"{mesh.data_axis!r} twice")
+        if sched.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {sched.slots}")
+        if casc.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {casc.max_queue}")
+        if casc.tau_units not in TAU_UNITS:
+            raise ValueError(f"unknown tau_units {casc.tau_units!r}; "
+                             f"use {TAU_UNITS}")
+        cap = (float(reg.num_features)
+               if self.native_tau_units == "count" else 1.0)
+        if casc.tau * self.tau_scale() > cap:
+            raise ValueError(
+                f"tau={casc.tau} {casc.tau_units} converts past the "
+                f"served margin cap ({cap} {self.native_tau_units}); every "
+                "request would escalate")
+        if not 0.0 <= casc.frontend_sparsity <= 1.0:
+            raise ValueError(f"frontend_sparsity must be in [0, 1], got "
+                             f"{casc.frontend_sparsity}")
+        dev = self.engine.device or ACAMConfig()
+        if (self.engine.backend == "device" and mesh.bank_shards > 1
+                and dev.sigma_program > 0.0
+                and self.engine.device_noise != "per_shard"):
+            raise ValueError(
+                f"device backend with sigma_program={dev.sigma_program} "
+                f"cannot shard the bank over {mesh.bank_shards} shards "
+                'under device_noise="global" (one physical array draws one '
+                'noise field); set engine.device_noise="per_shard" to '
+                "program one array per shard")
+        hash(self)  # fail fast: specs must stay usable as cache/jit keys
+        return self
+
+    # -- unit conversion ----------------------------------------------------
+
+    @property
+    def native_tau_units(self) -> str:
+        """The units the served margins actually arrive in: matchline
+        fractions (0..1) for the device backend and the similarity method,
+        match counts (0..N) for the digital feature-count paths."""
+        if self.engine.backend == "device" \
+                or self.engine.method == "similarity":
+            return "fraction"
+        return "count"
+
+    def tau_scale(self) -> float:
+        """Multiplier taking a tau in `cascade.tau_units` to native units."""
+        given, native = self.cascade.tau_units, self.native_tau_units
+        if given == native:
+            return 1.0
+        n = float(self.registry.num_features)
+        return 1.0 / n if native == "fraction" else n
+
+    # -- JSON ---------------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        d = {
+            "registry": self.registry._asdict(),
+            "engine": self.engine._asdict(),
+            "mesh": self.mesh._asdict(),
+            "scheduler": self.scheduler._asdict(),
+            "cascade": self.cascade._asdict(),
+        }
+        eng = d["engine"]
+        if eng["block"] is not None:
+            eng["block"] = list(eng["block"])
+        if eng["device"] is not None:
+            eng["device"] = self.engine.device._asdict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServiceSpec":
+        eng = dict(d.get("engine", {}))
+        if eng.get("block") is not None:
+            eng["block"] = tuple(int(b) for b in eng["block"])
+        if eng.get("device") is not None:
+            eng["device"] = ACAMConfig(**eng["device"])
+        return cls(
+            registry=RegistrySpec(**d.get("registry", {})),
+            engine=EngineConfig(**eng),
+            mesh=MeshSpec(**d.get("mesh", {})),
+            scheduler=SchedulerSpec(**d.get("scheduler", {})),
+            cascade=CascadeSpec(**d.get("cascade", {})),
+        )
+
+    def to_json(self, *, indent: int | None = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ServiceSpec":
+        return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def from_file(cls, path: str) -> "ServiceSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def aligned_classes(bank_shards: int, *, class_bucket: int = 16,
+                    base: int = 128) -> int:
+    """The registry's default class capacity (``base``) rounded up to cut
+    into ``bank_shards`` shards of whole ``class_bucket``-row buckets —
+    the one expression every spec builder uses for a default-capacity
+    registry at a given shard count."""
+    align = max(1, bank_shards) * class_bucket
+    return -(-base // align) * align
+
+
+def from_legacy(num_features: int, *, config=None, k_max: int = 2,
+                class_bucket: int = 16, backend: str | None = None,
+                bank_shards: int = 1) -> ServiceSpec:
+    """Bridge the pre-spec `ACAMService(...)` constructor surface onto one
+    `ServiceSpec` (the deprecated shims delegate here). Semantics match the
+    old constructor: ``backend=None`` resolves the process default ONCE,
+    taus are match-count units, capacity is silently rounded up to a shard
+    multiple (the spec path validates it eagerly instead), and no mesh is
+    installed (legacy callers installed their own). One deliberate fix over
+    the old constructor: ``method="similarity"`` margins live in [0, 1], so
+    count-unit taus are now converted (`tau_scale` = 1/N) — the old code
+    only rescaled for ``backend="device"`` and would have compared a
+    count-unit tau against fraction-unit margins."""
+    from repro import match as match_lib
+    from repro.serve.acam_service import ServiceConfig
+
+    config = config or ServiceConfig()
+    return ServiceSpec(
+        registry=RegistrySpec(num_features=num_features, k_max=k_max,
+                              class_bucket=class_bucket,
+                              initial_classes=aligned_classes(
+                                  bank_shards, class_bucket=class_bucket)),
+        engine=EngineConfig(method=config.method, alpha=config.alpha,
+                            backend=backend or match_lib.default_backend(),
+                            margin=True),
+        mesh=MeshSpec(bank_shards=bank_shards, install=False),
+        scheduler=SchedulerSpec(slots=config.slots),
+        cascade=CascadeSpec(tau=config.margin_tau, tau_units="count",
+                            max_queue=config.max_queue,
+                            frontend_macs=config.frontend_macs,
+                            frontend_sparsity=config.frontend_sparsity,
+                            softmax_head_ops=config.softmax_head_ops,
+                            paper_faithful=config.paper_faithful),
+    )

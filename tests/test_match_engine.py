@@ -488,6 +488,33 @@ class TestSweepProgramNoise:
             match.engine_for(backend="kernel").sweep_program_noise(
                 feats, bank, 2)
 
+    def test_per_shard_noise_is_a_distinct_deterministic_semantics(self):
+        """Satellite: `device_noise="per_shard"` programs one array per
+        bank shard (fold_in(seed, s)) — the sweep covers the tiled layout
+        without a mesh via `bank_shards=S` emulation."""
+        key = jax.random.PRNGKey(34)
+        bank = _bank(key, c=8, k=1, n=32)
+        feats = jax.random.normal(jax.random.fold_in(key, 4), (20, 32))
+        dev = acam.ACAMConfig(sigma_program=0.3)
+        tiled = match.engine_for(backend="device", device=dev, seed=5,
+                                 device_noise="per_shard")
+        mono = match.engine_for(backend="device", device=dev, seed=5)
+        # per-shard noise lifts the backend's bank-sharding refusal
+        assert tiled.backend(None).supports_bank_sharding
+        assert not mono.backend(None).supports_bank_sharding
+        _, pc2 = tiled.sweep_program_noise(feats, bank, 3, bank_shards=2)
+        _, pc2b = tiled.sweep_program_noise(feats, bank, 3, bank_shards=2)
+        np.testing.assert_array_equal(np.asarray(pc2), np.asarray(pc2b))
+        # a 2-array tiling realises a different noise field than 1 array
+        _, pc1 = tiled.sweep_program_noise(feats, bank, 3, bank_shards=1)
+        assert not np.allclose(np.asarray(pc1), np.asarray(pc2))
+        # ...and than the "global" one-array semantics (fold_in vs raw key)
+        _, pcg = mono.sweep_program_noise(feats, bank, 3)
+        assert not np.allclose(np.asarray(pcg), np.asarray(pc2))
+        # indivisible class counts fall back to one array, not an error
+        _, pc_odd = tiled.sweep_program_noise(feats, bank, 3, bank_shards=3)
+        np.testing.assert_array_equal(np.asarray(pc_odd), np.asarray(pc1))
+
 
 def run_sub(code: str, timeout=600) -> str:
     env = dict(os.environ)
