@@ -37,6 +37,14 @@ outgrows one device. (On this CPU container both run through Pallas
 interpret, so the sharded rows are a correctness-path number; the
 crossover itself is a TPU measurement.)
 
+**Resilience rows** (`benchmarks/traces.py` harness): ``"trace": "burst"``
+replays a seeded bursty Zipf trace with the overload policy armed and adds
+``p99_burst_ms`` / ``p99_calm_ms`` / ``shed_rate``; ``"trace": "chaos"``
+kills the service mid-trace, restores it from its durable snapshot, asserts
+bit-identity against a clean build and adds ``recovery_ms`` /
+``lost_in_flight``. ``--chaos`` runs only the chaos smoke and appends its
+row to an existing ``BENCH_serving.json`` (the CI resilience job).
+
 ``--smoke`` restricts the sweep for CI. `run()` keeps the harness contract
 used by benchmarks/run.py: a list of ``{"name", "us_per_call", "derived"}``
 rows.
@@ -275,6 +283,142 @@ def reshard_bench(*, seed: int = 0, tenants: int = 8, slots: int = 64,
     return entry
 
 
+def _traces():
+    """Import benchmarks/traces.py under both invocation styles (package
+    via benchmarks.run, script dir on sys.path via `python
+    benchmarks/serving_bench.py`)."""
+    try:
+        from benchmarks import traces
+    except ImportError:
+        import traces
+    return traces
+
+
+def burst_bench(*, smoke: bool = False, seed: int = 0) -> dict:
+    """p99-under-burst + shed rate: replay a seeded bursty Zipf trace
+    against a service whose overload policy is armed (``shed_queue``), so
+    burst phases push the queue past the threshold and ticks degrade to
+    ACAM-only answers. The row tracks burst-phase p99 separately from calm
+    p99 and records how much of the traffic was shed."""
+    from repro.serve.control import HybridService
+
+    traces = _traces()
+    slots = 32
+    cfg = traces.TraceConfig(
+        seed=seed, tenants=8, classes=NUM_CLASSES,
+        num_features=NUM_FEATURES, requests=256 if smoke else 1024,
+        burst=128, calm=8, phase_ticks=3)
+    spec = make_spec(slots, requests=cfg.requests)
+    spec = spec._replace(cascade=spec.cascade._replace(shed_queue=2 * slots))
+    svc = HybridService.from_spec(spec)
+    pool = traces.TenantPool(cfg)
+    pool.register_all(svc)
+    svc.serve([pool.request(0, seed + 1)])  # compile warmup
+    svc.reset_metrics()
+    svc, stats = traces.replay(svc, traces.make_trace(cfg), pool)
+    m = svc.metrics()
+    entry = {
+        "tenants": cfg.tenants, "slots": slots, "requests": cfg.requests,
+        "classes": cfg.classes, "matching_backend": "default",
+        "bank_sharding": svc.registry.bank_shards,
+        "trace": "burst",
+        "p99_burst_ms": stats["p99_burst_ms"],
+        "p99_calm_ms": stats["p99_calm_ms"],
+        "shed_rate": m["shed_rate"],
+        "load_shed_ticks": m["load_shed_ticks"],
+        "requests_per_s": m["requests_per_s"],
+        "latency_p50_ms": m["latency_p50_ms"],
+        "latency_p99_ms": m["latency_p99_ms"],
+        "escalation_rate": m["escalation_rate"],
+        "nj_per_request": m["nj_per_request"],
+        "occupancy": m["occupancy"],
+        "classify_dispatches": m["classify_dispatches"],
+    }
+    print(f"burst trace: p99 burst {entry['p99_burst_ms']} ms vs calm "
+          f"{entry['p99_calm_ms']} ms, shed rate {entry['shed_rate']:.3f} "
+          f"({entry['load_shed_ticks']} shed ticks)")
+    return entry
+
+
+def chaos_bench(*, smoke: bool = False, seed: int = 0) -> dict:
+    """Kill-and-restore recovery time: replay a trace with a mid-stream
+    kill injected (the service object is dropped — in-flight queue lost,
+    durable snapshot survives) and measure snapshot-restore-to-serving
+    wall time. Asserts the restored service is bit-identical to a clean
+    build on a fixed probe set. Under ``REPRO_FORCE_MESH`` the service
+    runs bank-sharded (spec-owned mesh), so the restore also exercises the
+    mesh-reinstall path."""
+    import tempfile
+
+    import jax
+
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.distributed import context, forcemesh
+    from repro.serve.control import HybridService
+
+    traces = _traces()
+    sharded = forcemesh.env_spec() is not None \
+        and len(jax.devices()) % 2 == 0
+    if sharded:
+        context.clear()
+    slots = 32
+    # phase_ticks=1 keeps a standing queue, so the kill catches (and the
+    # lost_in_flight row reports) genuinely in-flight work
+    cfg = traces.TraceConfig(
+        seed=seed, tenants=8, classes=NUM_CLASSES,
+        num_features=NUM_FEATURES, requests=192 if smoke else 768,
+        burst=64, calm=8, phase_ticks=1)
+    spec = make_spec(slots, requests=cfg.requests,
+                     bank_shards=2 if sharded else 1, install_mesh=sharded)
+    with tempfile.TemporaryDirectory() as td:
+        ckpt = Checkpointer(td, keep=3)
+        svc = HybridService.from_spec(spec)
+        pool = traces.TenantPool(cfg)
+        pool.register_all(svc)
+        svc.serve([pool.request(0, seed + 1)])  # compile warmup
+        svc.reset_metrics()
+        chaos = traces.ChaosPlan(ckpt=ckpt, snapshot_every=2,
+                                 kill_at_tick=3)
+        svc, stats = traces.replay(svc, traces.make_trace(cfg), pool,
+                                   chaos=chaos)
+        assert stats["killed"] and stats["recovery_ms"] is not None
+        m = svc.metrics()
+
+        # restored-vs-clean bit-identity probe: the restored incarnation
+        # must serve exactly what a never-killed service would
+        probe = [pool.request(t % cfg.tenants, 999_000 + t)
+                 for t in range(64)]
+        sig = [(r.tenant_id, r.pred, r.escalated, round(r.margin, 6))
+               for r in svc.serve(probe)]
+        clean = HybridService.from_spec(spec)
+        pool.register_all(clean)
+        clean_sig = [(r.tenant_id, r.pred, r.escalated, round(r.margin, 6))
+                     for r in clean.serve(probe)]
+        assert sig == clean_sig, "restored service diverged from clean build"
+    if sharded:
+        context.clear()
+    entry = {
+        "tenants": cfg.tenants, "slots": slots, "requests": cfg.requests,
+        "classes": cfg.classes, "matching_backend": "default",
+        "bank_sharding": 2 if sharded else 1,
+        "trace": "chaos",
+        "recovery_ms": stats["recovery_ms"],
+        "lost_in_flight": stats["lost_in_flight"],
+        "requests_per_s": m["requests_per_s"],
+        "latency_p50_ms": m["latency_p50_ms"],
+        "latency_p99_ms": m["latency_p99_ms"],
+        "escalation_rate": m["escalation_rate"],
+        "nj_per_request": m["nj_per_request"],
+        "occupancy": m["occupancy"],
+        "classify_dispatches": m["classify_dispatches"],
+    }
+    print(f"chaos trace: killed mid-stream, restored bit-identical in "
+          f"{entry['recovery_ms']:.1f} ms "
+          f"({entry['lost_in_flight']} in-flight lost, "
+          f"bank_shards={entry['bank_sharding']})")
+    return entry
+
+
 def sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
     tenant_grid = SMOKE_TENANTS if smoke else TENANT_SWEEP
     slot_grid = SMOKE_SLOTS if smoke else SLOT_SWEEP
@@ -302,6 +446,10 @@ def sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
     reshard = reshard_bench(seed=seed)
     if reshard is not None:
         entries.append(reshard)
+    # resilience rows: p99-under-burst + shed rate, and kill/restore
+    # recovery time (benchmarks/traces.py chaos harness)
+    entries.append(burst_bench(smoke=smoke, seed=seed))
+    entries.append(chaos_bench(smoke=smoke, seed=seed))
     return entries
 
 
@@ -328,24 +476,42 @@ def run() -> list[dict]:
     fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
     entries = sweep(smoke=fast)
     write_bench_json(entries)
-    return [{
-        "name": (f"serving_reshard_1to{e['bank_sharding']}"
-                 if "reshard_downtime_ms" in e else
-                 f"serving_t{e['tenants']}_c{e['classes']}_s{e['slots']}"
-                 + ("" if e["bank_sharding"] == 1
-                    else f"_shard{e['bank_sharding']}")
-                 + ("" if e["matching_backend"] == "default"
-                    else f"_{e['matching_backend']}")),
-        "us_per_call": round(1e6 / e["requests_per_s"], 2)
-        if e["requests_per_s"] else 0.0,
-        "derived": (f"downtime={e['reshard_downtime_ms']}ms,"
-                    f"moved={e['tenants_moved']},"
-                    f"{e['requests_per_s']:.0f}req/s"
-                    if "reshard_downtime_ms" in e else
-                    f"{e['requests_per_s']:.0f}req/s,"
-                    f"esc={e['escalation_rate']:.3f},"
-                    f"{e['nj_per_request']:.2f}nJ/req"),
-    } for e in entries]
+    return [{"name": _row_name(e), "us_per_call":
+             round(1e6 / e["requests_per_s"], 2)
+             if e["requests_per_s"] else 0.0,
+             "derived": _row_derived(e)} for e in entries]
+
+
+def _row_name(e: dict) -> str:
+    if "reshard_downtime_ms" in e:
+        return f"serving_reshard_1to{e['bank_sharding']}"
+    if e.get("trace") == "chaos":
+        return "serving_chaos_recovery"
+    if e.get("trace") == "burst":
+        return f"serving_burst_t{e['tenants']}_s{e['slots']}"
+    return (f"serving_t{e['tenants']}_c{e['classes']}_s{e['slots']}"
+            + ("" if e["bank_sharding"] == 1
+               else f"_shard{e['bank_sharding']}")
+            + ("" if e["matching_backend"] == "default"
+               else f"_{e['matching_backend']}"))
+
+
+def _row_derived(e: dict) -> str:
+    if "reshard_downtime_ms" in e:
+        return (f"downtime={e['reshard_downtime_ms']}ms,"
+                f"moved={e['tenants_moved']},"
+                f"{e['requests_per_s']:.0f}req/s")
+    if e.get("trace") == "chaos":
+        return (f"recovery={e['recovery_ms']}ms,"
+                f"lost={e['lost_in_flight']},"
+                f"{e['requests_per_s']:.0f}req/s")
+    if e.get("trace") == "burst":
+        return (f"p99_burst={e['p99_burst_ms']}ms,"
+                f"shed={e['shed_rate']:.3f},"
+                f"{e['requests_per_s']:.0f}req/s")
+    return (f"{e['requests_per_s']:.0f}req/s,"
+            f"esc={e['escalation_rate']:.3f},"
+            f"{e['nj_per_request']:.2f}nJ/req")
 
 
 def main() -> None:
@@ -358,14 +524,36 @@ def main() -> None:
                          "REPRO_FORCE_MESH, reconfigure to 2 mid-stream, "
                          "assert bit-identity + one sharded dispatch per "
                          "tick, report drain->resume downtime")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run ONLY the chaos smoke: replay a bursty trace, "
+                         "kill the service mid-stream, restore from its "
+                         "snapshot, assert bit-identity vs a clean build, "
+                         "and append the recovery-time row to "
+                         "BENCH_serving.json")
     args = ap.parse_args()
-    if args.reshard:
+    if args.reshard or args.chaos:
         from repro.distributed import forcemesh
 
         forcemesh.apply_xla_flags()
+    if args.reshard:
         entry = reshard_bench()
         if entry is None:
             raise SystemExit("--reshard needs REPRO_FORCE_MESH=DxM")
+        return
+    if args.chaos:
+        entry = chaos_bench(smoke=True)
+        assert entry["recovery_ms"] is not None, "service never recovered"
+        path = "BENCH_serving.json"
+        if os.path.exists(path):
+            with open(path) as f:
+                payload = json.load(f)
+            payload["entries"] = [e for e in payload["entries"]
+                                  if e.get("trace") != "chaos"] + [entry]
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=1)
+        else:
+            write_bench_json([entry], path)
+        print("appended chaos recovery row to BENCH_serving.json")
         return
     if args.smoke:
         os.environ["REPRO_BENCH_FAST"] = "1"

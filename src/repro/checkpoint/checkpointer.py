@@ -63,6 +63,9 @@ class Checkpointer:
 
     # ---- save ----
     def save(self, step: int, tree: PyTree, *, blocking: bool = True) -> None:
+        # a failed async write must not be silently dropped: surface the
+        # worker's exception on the NEXT save (or wait()), not never
+        self._raise_pending()
         # snapshot to host memory NOW (device buffers may be donated next step)
         flat = _flatten(jax.device_get(tree))
         treedef = jax.tree_util.tree_structure(tree)
@@ -93,6 +96,13 @@ class Checkpointer:
             self._q.put(None)
             self._worker.join()
             self._worker = None
+        self._raise_pending()
+
+    def _raise_pending(self) -> None:
+        """Re-raise a worker-thread failure recorded by `_drain`. Called at
+        every `save`/`wait` entry so an async checkpoint that failed to hit
+        disk is reported on the next checkpoint attempt instead of being
+        dropped silently (the restart would resume from a stale step)."""
         if self._error:
             err, self._error = self._error, None
             raise err
@@ -162,3 +172,30 @@ class Checkpointer:
             # committed jax arrays (donation-compatible)
             tree = jax.tree_util.tree_map(jnp.asarray, tree)
         return tree
+
+    def restore_dict(self, step: int) -> dict:
+        """Restore a checkpoint saved from (nested) string-keyed dicts back
+        into plain nested dicts of host numpy arrays — no `like` tree
+        needed, the manifest alone drives the load.
+
+        This is the service-snapshot path (`repro.serve.snapshot`): a
+        restarting process has nothing to build a `like` tree from until it
+        has read the checkpoint, so the structure must come from the
+        manifest. Only dict-of-dict trees round-trip this way (key paths
+        are re-split on the separator); pytrees with list/tuple/custom
+        nodes should use `restore`.
+        """
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        out: dict = {}
+        for key, info in manifest["leaves"].items():
+            arr = np.load(d / info["file"])
+            logical = np.dtype(info["dtype"])
+            if arr.dtype != logical:
+                arr = arr.view(logical)  # raw-bit round-trip (bf16/fp8)
+            node = out
+            parts = key.split(_SEP)
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = arr
+        return out

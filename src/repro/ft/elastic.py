@@ -79,6 +79,38 @@ class StragglerMonitor:
             "skip_contribution": slow,  # bounded-staleness option
         }
 
+    def observe(self, host: int, dt_s: float, *, window: int = 64) -> dict:
+        """Single-stream variant of `step_times`: one duration per call,
+        compared against the rolling median of recent history instead of a
+        same-step cross-host median (which is degenerate at n=1).
+
+        This is the serving-tier heartbeat: the micro-batch scheduler feeds
+        every tick's wall time here (`repro.serve.scheduler`), so a tick
+        that blows past ``deadline_factor`` x the recent median — a stuck
+        collective, a device fallen off the mesh, an accidental retrace
+        storm — accrues strikes, and ``evict`` firing is the control
+        plane's cue to shed load or shrink the mesh
+        (`HybridService.handle_device_loss`). Same strike/decay/evict
+        policy as `step_times`.
+        """
+        hist = self.history[-window:]
+        baseline = sorted(hist)[len(hist) // 2] if hist else dt_s
+        self.history.append(dt_s)
+        deadline = max(self.min_deadline_s, self.deadline_factor * baseline)
+        slow = [host] if dt_s > deadline else []
+        for h in slow:
+            self.flagged[h] = self.flagged.get(h, 0) + 1
+        if not slow and self.flagged.get(host):
+            self.flagged[host] = 0
+        evict = [h for h, strikes in self.flagged.items()
+                 if strikes >= self.evict_after]
+        return {
+            "deadline_s": deadline,
+            "stragglers": slow,
+            "evict": evict,
+            "skip_contribution": slow,
+        }
+
 
 class Heartbeat:
     """Minimal liveness tracker the launcher polls between steps."""

@@ -6,6 +6,7 @@ touches jax device state.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -22,7 +23,8 @@ def make_host_mesh():
 
 
 def make_serving_mesh(*, bank_shards: int = 1,
-                      axis_names: tuple[str, str] = ("data", "model")):
+                      axis_names: tuple[str, str] = ("data", "model"),
+                      devices=None):
     """(data = devices/bank_shards, model = bank_shards) over the available
     devices — the ACAM serving layout: request batches shard over "data",
     the template super-bank's class rows shard over "model" (the engine's
@@ -31,13 +33,20 @@ def make_serving_mesh(*, bank_shards: int = 1,
     `ServiceSpec.mesh` with custom axis names
     (`repro.serve.control.install_mesh` is the usual caller).
 
+    ``devices`` restricts the mesh to an explicit device subset — the
+    degraded-fleet path (`HybridService.handle_device_loss` passes the
+    survivors after a simulated device failure). Default: all of
+    `jax.devices()`.
+
     On CPU, force host devices first (``REPRO_FORCE_MESH`` /
     `repro.distributed.forcemesh.apply_xla_flags` before jax initialises).
     """
-    ndev = len(jax.devices())
+    devs = list(jax.devices()) if devices is None else list(devices)
+    ndev = len(devs)
     if bank_shards < 1 or ndev % bank_shards:
         raise ValueError(
             f"bank_shards={bank_shards} must divide the {ndev} available "
             "devices")
-    return jax.make_mesh((ndev // bank_shards, bank_shards),
-                         tuple(axis_names))
+    return jax.sharding.Mesh(
+        np.asarray(devs).reshape(ndev // bank_shards, bank_shards),
+        tuple(axis_names))

@@ -27,6 +27,10 @@ Two workloads behind one CLI:
   REPRO_FORCE_MESH=2x2 PYTHONPATH=src python -m repro.launch.serve \
       --workload acam --bank-shards 2   # 2D-sharded: batch over "data",
                                         # super-bank class rows over "model"
+  PYTHONPATH=src python -m repro.launch.serve --workload acam \
+      --snapshot-dir /tmp/acam-ckpt     # durable state: snapshot on exit
+  PYTHONPATH=src python -m repro.launch.serve --workload acam \
+      --snapshot-dir /tmp/acam-ckpt --restore   # restart bit-identical
 """
 from __future__ import annotations
 
@@ -56,7 +60,9 @@ def build_acam_spec(args):
         mesh=spec_lib.MeshSpec(bank_shards=args.bank_shards),
         scheduler=spec_lib.SchedulerSpec(slots=args.slots),
         cascade=spec_lib.CascadeSpec(tau=args.margin_tau,
-                                     tau_units="count"),
+                                     tau_units="count",
+                                     deadline_ms=args.deadline_ms,
+                                     shed_queue=args.shed_queue),
     )
 
 
@@ -94,7 +100,18 @@ def run_acam(args) -> dict:
     spec = build_acam_spec(args)
     if args.print_spec:
         print(spec.to_json())
-    svc = HybridService.from_spec(spec)
+    if args.restore:
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        if not args.snapshot_dir:
+            raise SystemExit("--restore needs --snapshot-dir")
+        svc, report = HybridService.restore(Checkpointer(args.snapshot_dir))
+        print(f"restored step {report.step}: {report.tenants} tenants, "
+              f"{report.restore_s * 1e3:.1f} ms"
+              + (" (resharded)" if report.resharded else ""))
+        spec = svc.spec
+    else:
+        svc = HybridService.from_spec(spec)
     n_features = spec.registry.num_features
     if spec.mesh.bank_shards > 1:
         print(f"installed serving mesh model={spec.mesh.bank_shards} "
@@ -106,7 +123,8 @@ def run_acam(args) -> dict:
             args.seed * 1000 + t, num_classes=args.classes,
             num_features=n_features)
         tid = f"tenant-{t}"
-        svc.register_tenant(tid, bank, head=head)
+        if tid not in svc.registry:  # a restored service adopted them all
+            svc.register_tenant(tid, bank, head=head)
         protos[tid] = p
 
     # mixed-tenant request stream (round-robin interleave, then shuffled —
@@ -127,6 +145,12 @@ def run_acam(args) -> dict:
 
     responses = svc.serve(reqs)
     m = svc.metrics()
+    if args.snapshot_dir:
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        step = svc.snapshot(Checkpointer(args.snapshot_dir))
+        print(f"service snapshot -> {args.snapshot_dir} step {step} "
+              f"(restart with --restore)")
     acc = float(np.mean([r.pred == y for r, y in zip(responses, truth)]))
     print(f"acam service: {m['completed']} requests over {args.tenants} "
           f"tenants, {m['classify_dispatches']} fused dispatches "
@@ -179,6 +203,21 @@ def main(argv=None) -> dict:
                          "a model mesh axis of this size (must divide the "
                          "device count; on CPU set REPRO_FORCE_MESH or "
                          "XLA_FLAGS host-device count first)")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="durable service state: snapshot the service "
+                         "(registry, placements, taus, heads, spec) into "
+                         "DIR after serving, via the atomic-rename "
+                         "checkpointer")
+    ap.add_argument("--restore", action="store_true",
+                    help="boot by restoring the latest snapshot from "
+                         "--snapshot-dir instead of building fresh "
+                         "(bit-identical serving, zero re-registrations)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request queue deadline: requests older than "
+                         "this at tick time are expired with an error")
+    ap.add_argument("--shed-queue", type=int, default=None,
+                    help="queue depth at which the service enters load-shed "
+                         "mode (ACAM stage alone, no CNN escalation)")
     ap.add_argument("--device-noise", default="global",
                     choices=("global", "per_shard"),
                     help="sigma_program noise semantics for the device "

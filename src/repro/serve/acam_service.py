@@ -39,6 +39,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +74,9 @@ class ClassifyResponse:
     energy_j: float  # E_backend, or E_frontend + E_backend if escalated
     latency_s: float  # submit -> response wall time
     error: str | None = None  # e.g. tenant evicted while the request queued
+    #: True: overload degraded this answer — the margin asked for CNN
+    #: escalation but load-shed mode served the ACAM winner instead
+    shed: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,6 +189,15 @@ class ACAMService:
             bank_shards=spec.mesh.bank_shards)
         self.scheduler = MicroBatchScheduler(
             self.registry, slots=spec.scheduler.slots, engine=spec.engine)
+        #: rolling latency window feeding the shed_p99_ms overload signal;
+        #: bounded so a burst's tail stops poisoning the estimate once the
+        #: service recovers
+        self._recent_lat: deque[float] = deque(maxlen=256)
+        #: control-plane failure state (simulated device loss): None = every
+        #: jax device is healthy; else the surviving device list every mesh
+        #: (re)install is built over (`HybridService.handle_device_loss`)
+        self._devices = None
+        self._lost_devices: set[int] = set()
         self._tenants: dict[str, _TenantRuntime] = {}
         self._head_w: np.ndarray | None = None  # (T_cap, N, C_head)
         self._head_b: np.ndarray | None = None  # (T_cap, C_head)
@@ -335,31 +348,74 @@ class ACAMService:
         self._m.submitted += 1
         return self._next_id
 
+    def overloaded(self) -> bool:
+        """Is the service past its overload thresholds RIGHT NOW? True when
+        the queue has grown to ``cascade.shed_queue`` or the rolling p99
+        latency exceeds ``cascade.shed_p99_ms`` — the next tick then runs
+        in load-shed mode (ACAM stage alone, no CNN escalation: the paper's
+        E_backend << E_frontend asymmetry as an overload policy)."""
+        casc = self.spec.cascade
+        if casc.shed_queue is not None \
+                and self.scheduler.qsize >= casc.shed_queue:
+            return True
+        if casc.shed_p99_ms is not None and len(self._recent_lat) >= 32:
+            p99 = float(np.percentile(
+                np.fromiter(self._recent_lat, np.float64), 99))
+            if p99 * 1e3 > casc.shed_p99_ms:
+                return True
+        return False
+
     def step(self) -> list[ClassifyResponse]:
-        """One scheduler tick + the cascade over its results."""
+        """One scheduler tick + the cascade over its results.
+
+        Resilience duties run first: requests older than the cascade's
+        per-request deadline are expired with an error (serving them
+        uselessly late helps nobody), and an overloaded tick degrades
+        gracefully — every slot is answered from the ACAM stage alone
+        (``shed=True`` where the margin asked for escalation) instead of
+        queueing CNN head work behind a growing backlog."""
         t0 = time.perf_counter()
+        responses: list[ClassifyResponse] = []
+        casc = self.spec.cascade
+        if casc.deadline_ms is not None:
+            for item in self.scheduler.expire(casc.deadline_ms / 1e3):
+                responses.append(ClassifyResponse(
+                    request_id=item.request_id, tenant_id=item.tenant_id,
+                    pred=-1, margin=0.0, escalated=False, energy_j=0.0,
+                    latency_s=time.perf_counter() - item.submit_t,
+                    error=f"deadline exceeded ({casc.deadline_ms} ms "
+                          "in queue)"))
+        shedding = self.overloaded()
         results = self.scheduler.tick()
         if not results:
-            return []
+            if responses:
+                self._m.record(responses,
+                               busy_s=time.perf_counter() - t0,
+                               escalation_dispatch=False)
+            return responses
+        if shedding:
+            self._m.load_shed_ticks += 1
         escalate: list[SlotResult] = []
-        keep: list[tuple[SlotResult, bool]] = []
+        keep: list[tuple[SlotResult, bool, bool]] = []
         for r in results:
             rt = self._tenants.get(r.item.tenant_id) if r.error is None \
                 else None
-            if rt is not None and rt.margin_tau is not None \
-                    and r.margin < rt.margin_tau:
+            wants = rt is not None and rt.margin_tau is not None \
+                and r.margin < rt.margin_tau
+            if wants and not shedding:
                 escalate.append(r)
-                keep.append((r, True))
+                keep.append((r, True, False))
             else:
-                keep.append((r, False))
+                # shed: the margin asked for the CNN head but overload says
+                # answer from the ACAM stage alone
+                keep.append((r, False, wants))
 
         esc_pred: dict[int, int] = {}
         if escalate:
             esc_pred = self._run_escalation(escalate)
 
-        responses = []
         now = time.perf_counter()
-        for r, escalated in keep:
+        for r, escalated, shed in keep:
             if r.error is not None:
                 responses.append(ClassifyResponse(
                     request_id=r.item.request_id,
@@ -374,9 +430,11 @@ class ACAMService:
                 request_id=r.item.request_id,
                 tenant_id=r.item.tenant_id, pred=pred,
                 margin=r.margin, escalated=escalated, energy_j=e,
-                latency_s=now - r.item.submit_t))
+                latency_s=now - r.item.submit_t, shed=shed))
         self._m.record(responses, busy_s=now - t0,
                        escalation_dispatch=bool(escalate))
+        self._recent_lat.extend(r.latency_s for r in responses
+                                if r.error is None)
         return responses
 
     def _run_escalation(self, escalate: list[SlotResult]) -> dict[int, int]:
@@ -415,11 +473,25 @@ class ACAMService:
     def metrics(self) -> dict:
         return self._m.as_dict(self.scheduler.stats)
 
+    def health(self) -> dict:
+        """Liveness view for operators and the chaos harness: straggler
+        strikes from the scheduler's tick heartbeats, queue depth, and
+        whether the next tick would run in load-shed mode."""
+        verdict = self.scheduler.last_verdict or {}
+        return {
+            "queue_depth": self.scheduler.qsize,
+            "load_shedding": self.overloaded(),
+            "slow_ticks": self.scheduler.stats.slow_ticks,
+            "straggler_strikes": dict(self.scheduler.monitor.flagged),
+            "evict_verdict": list(verdict.get("evict", ())),
+        }
+
     def reset_metrics(self) -> None:
         """Zero counters/latencies (e.g. after a warmup burst)."""
         from repro.serve.scheduler import SchedulerStats
 
         self._m = _Metrics()
+        self._recent_lat.clear()
         self.scheduler.stats = SchedulerStats(slots=self.scheduler.slots)
 
 
@@ -430,6 +502,8 @@ class _Metrics:
     escalated: int = 0
     rejected: int = 0
     failed: int = 0  # served with error (e.g. tenant evicted mid-queue)
+    shed: int = 0  # answered from ACAM alone under overload
+    load_shed_ticks: int = 0  # ticks served in load-shed mode
     escalation_dispatches: int = 0
     energy_j: float = 0.0
     busy_s: float = 0.0
@@ -441,6 +515,7 @@ class _Metrics:
         self.completed += len(responses)
         self.failed += sum(r.error is not None for r in responses)
         self.escalated += sum(r.escalated for r in responses)
+        self.shed += sum(r.shed for r in responses)
         self.escalation_dispatches += int(escalation_dispatch)
         self.energy_j += sum(r.energy_j for r in responses)
         self.busy_s += busy_s
@@ -457,6 +532,9 @@ class _Metrics:
             "failed": self.failed,
             "escalated": self.escalated,
             "escalation_rate": round(self.escalated / done, 4),
+            "shed": self.shed,
+            "shed_rate": round(self.shed / done, 4),
+            "load_shed_ticks": self.load_shed_ticks,
             "escalation_dispatches": self.escalation_dispatches,
             "requests_per_s": round(self.completed / self.busy_s, 2)
             if self.busy_s else 0.0,

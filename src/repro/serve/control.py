@@ -45,6 +45,14 @@ Transitions the spec cannot express live (a different feature dim, k_max
 or bucket size — the banks themselves would change shape) raise
 `ReconfigureError` before anything mutates.
 
+**Durability & failover** (PR 6). `snapshot(ckpt)` / `restore(ckpt)`
+persist and rebuild the full service through the atomic-rename
+checkpointer (`repro.serve.snapshot`) — a killed service restarts
+bit-identical, optionally onto a different mesh. `handle_device_loss`
+degrades the live service onto the surviving devices (largest shard count
+they can form, as an ordinary reconfigure transition); `restore_devices`
+heals back to the full fleet.
+
 The report returned by `reconfigure` carries the drained responses, the
 action log, and the drain->resume wall time (`downtime_s`) — the number
 `benchmarks/serving_bench.py --reshard` tracks.
@@ -77,7 +85,7 @@ class ReconfigureReport:
     tenants_moved: int = 0  # reshard: tenants whose class offset changed
 
 
-def install_mesh(mesh: MeshSpec):
+def install_mesh(mesh: MeshSpec, devices=None):
     """Build and install the (data = devices/bank_shards, model =
     bank_shards) serving mesh described by a `MeshSpec`. Returns the mesh.
 
@@ -85,12 +93,16 @@ def install_mesh(mesh: MeshSpec):
     launcher helper: `HybridService.from_spec` calls it BEFORE any service
     tier exists, so registry placement and the engine's `PartitionPlan`
     can never disagree about the shard count.
+
+    ``devices`` restricts the mesh to a survivor subset — the degraded
+    path `handle_device_loss` takes after a simulated device failure.
     """
     from repro.distributed import context
     from repro.launch.mesh import make_serving_mesh
 
     built = make_serving_mesh(bank_shards=mesh.bank_shards,
-                              axis_names=(mesh.data_axis, mesh.model_axis))
+                              axis_names=(mesh.data_axis, mesh.model_axis),
+                              devices=devices)
     context.set_mesh_axes(mesh.data_axis, mesh.model_axis, built)
     return built
 
@@ -128,10 +140,9 @@ class HybridService(ACAMService):
                     "banks would change shape; build a fresh service")
         if new_spec.mesh.install:
             # fail BEFORE any mutation: a mesh the devices cannot form must
-            # not strand a resharded registry behind the old mesh
-            import jax
-
-            ndev = len(jax.devices())
+            # not strand a resharded registry behind the old mesh (after a
+            # device loss, "available" means the survivors)
+            ndev = len(self._avail_devices())
             if ndev % new_spec.mesh.bank_shards:
                 raise ReconfigureError(
                     f"mesh.bank_shards={new_spec.mesh.bank_shards} does not "
@@ -155,7 +166,7 @@ class HybridService(ACAMService):
                 f"re-packed, 0 re-registrations)")
         if new_spec.mesh != old.mesh or reshard:
             if new_spec.mesh.install:
-                install_mesh(new_spec.mesh)
+                install_mesh(new_spec.mesh, devices=self._devices)
                 actions.append(
                     f"installed ({new_spec.mesh.data_axis}, "
                     f"{new_spec.mesh.model_axis}={new_spec.mesh.bank_shards})"
@@ -172,7 +183,7 @@ class HybridService(ACAMService):
             stats = self.scheduler.stats  # cumulative view stays coherent
             self.scheduler = MicroBatchScheduler(
                 self.registry, slots=new_spec.scheduler.slots,
-                engine=new_spec.engine)
+                engine=new_spec.engine, monitor=self.scheduler.monitor)
             stats.slots = new_spec.scheduler.slots
             self.scheduler.stats = stats
             actions.append(f"scheduler slots {old.scheduler.slots} -> "
@@ -187,3 +198,107 @@ class HybridService(ACAMService):
                                  drained=drained,
                                  downtime_s=time.perf_counter() - t0,
                                  tenants_moved=moved)
+
+    # ------------------------------------------------------- durability
+
+    def snapshot(self, ckpt, step: int | None = None, *,
+                 blocking: bool = True) -> int:
+        """Persist the full service state (registry, placements, taus, head
+        tables, spec) through the atomic-rename checkpointer. Returns the
+        step written. See `repro.serve.snapshot`."""
+        from repro.serve import snapshot as snapshot_lib
+
+        return snapshot_lib.save_snapshot(self, ckpt, step,
+                                          blocking=blocking)
+
+    @classmethod
+    def restore(cls, ckpt, step: int | None = None, *,
+                mesh: MeshSpec | None = None):
+        """Rebuild a ready-to-serve service from its latest (or a given)
+        snapshot — bit-identical preds/margins/escalations, zero tenant
+        re-registrations. ``mesh`` restores onto a DIFFERENT mesh (elastic
+        shrink/grow across a restart). Returns ``(service,
+        RestoreReport)``."""
+        from repro.serve import snapshot as snapshot_lib
+
+        return snapshot_lib.restore_service(ckpt, step, mesh=mesh, cls=cls)
+
+    # --------------------------------------------------- elastic failover
+
+    def _avail_devices(self) -> list:
+        """The devices the control plane may build meshes over: all of
+        `jax.devices()` minus any reported lost."""
+        import jax
+
+        if self._devices is not None:
+            return list(self._devices)
+        return list(jax.devices())
+
+    def handle_device_loss(self, lost) -> ReconfigureReport:
+        """Degrade gracefully after a (simulated) device failure: drop the
+        lost devices, pick the largest shard count the survivors can form,
+        and reshard the live service onto them.
+
+        ``lost`` is an iterable of device indices into the full
+        `jax.devices()` list. Losses accumulate across calls (a second
+        failure shrinks further); `restore_devices` heals the fleet. The
+        reshard is the ordinary `reconfigure` transition — zero tenant
+        re-registrations, bit-identical results after the shrink.
+        """
+        import jax
+
+        all_devs = list(jax.devices())
+        for i in lost:
+            if not 0 <= i < len(all_devs):
+                raise ReconfigureError(
+                    f"device index {i} out of range (fleet has "
+                    f"{len(all_devs)} devices)")
+            self._lost_devices.add(int(i))
+        survivors = [d for i, d in enumerate(all_devs)
+                     if i not in self._lost_devices]
+        if not survivors:
+            raise ReconfigureError("all devices lost; nothing to serve on")
+        self._devices = survivors
+
+        # largest shard count the survivors can still form, capped at the
+        # current one (device loss never widens the model axis)
+        shards = min(self.spec.mesh.bank_shards, len(survivors))
+        while len(survivors) % shards:
+            shards -= 1
+        target = self.spec._replace(
+            mesh=self.spec.mesh._replace(bank_shards=shards))
+        if target != self.spec:
+            report = self.reconfigure(target)
+        else:
+            # same spec, fewer devices: the mesh itself must still shrink
+            t0 = time.perf_counter()
+            drained = self.drain()
+            actions: tuple[str, ...] = ()
+            if self.spec.mesh.install:
+                install_mesh(self.spec.mesh, devices=survivors)
+                actions = (f"reinstalled mesh on {len(survivors)} "
+                           "surviving devices (generation bump -> "
+                           "scheduler re-trace)",)
+            report = ReconfigureReport(
+                spec=self.spec, actions=actions, drained=drained,
+                downtime_s=time.perf_counter() - t0)
+        return dataclasses.replace(
+            report, actions=report.actions + (
+                f"device loss: {len(self._lost_devices)} down, "
+                f"{len(survivors)} surviving, bank_shards={shards}",))
+
+    def restore_devices(self) -> ReconfigureReport:
+        """Heal the fleet: forget recorded losses and rebuild the spec's
+        mesh over the full device set (the repair-complete transition)."""
+        self._lost_devices.clear()
+        self._devices = None
+        t0 = time.perf_counter()
+        drained = self.drain()
+        actions: tuple[str, ...] = ()
+        if self.spec.mesh.install:
+            install_mesh(self.spec.mesh)
+            actions = ("restored full fleet: mesh reinstalled over all "
+                       "devices",)
+        return ReconfigureReport(spec=self.spec, actions=actions,
+                                 drained=drained,
+                                 downtime_s=time.perf_counter() - t0)

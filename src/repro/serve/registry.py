@@ -382,6 +382,68 @@ class TemplateBankRegistry:
         del self._tenants[tenant_id]
         self._bump()
 
+    # -- durable state (service snapshot/restore) ---------------------------
+
+    def snapshot_state(self) -> tuple[dict, dict]:
+        """The registry's full durable state as ``(arrays, meta)``.
+
+        ``arrays`` is a flat dict of host numpy copies (copies, so an async
+        checkpoint writer never races a hot register/update), ``meta`` a
+        JSON-serialisable dict of the scalars + tenant placements. Together
+        they are everything `load_state` needs to rebuild this registry
+        bit-identically — the super-bank a restored service gathers is the
+        same bytes, so served predictions/margins are the same bits
+        (`repro.serve.snapshot`).
+        """
+        arrays = {
+            "templates": self._templates.copy(),
+            "lower": self._lower.copy(),
+            "upper": self._upper.copy(),
+            "valid": self._valid.copy(),
+            "thresholds": self._thr.copy(),
+            "bucket_used": self._bucket_used.copy(),
+            "slot_used": self._slot_used.copy(),
+        }
+        meta = {
+            "num_features": self.num_features,
+            "k_max": self.k_max,
+            "class_bucket": self.class_bucket,
+            "bank_shards": self.bank_shards,
+            "capacity_classes": self._c_cap,
+            "capacity_tenants": self._t_cap,
+            "generation": self.generation,
+            "tenants": [dataclasses.asdict(e)
+                        for e in self._tenants.values()],
+        }
+        return arrays, meta
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        """Adopt a `snapshot_state` payload wholesale: capacities, bank
+        arrays, allocation maps and tenant placements — zero re-registrations
+        (`register` is never called; `TenantEntry`s are reconstructed as
+        snapshotted). The bank-shape fields must match this registry's
+        construction parameters; everything else is overwritten."""
+        for field in ("num_features", "k_max", "class_bucket"):
+            if meta[field] != getattr(self, field):
+                raise RegistryError(
+                    f"snapshot {field}={meta[field]} does not match this "
+                    f"registry's {field}={getattr(self, field)}; restore "
+                    "through a spec built from the snapshot")
+        self._c_cap = int(meta["capacity_classes"])
+        self._t_cap = int(meta["capacity_tenants"])
+        self.bank_shards = int(meta["bank_shards"])
+        self._templates = np.array(arrays["templates"], np.float32)
+        self._lower = np.array(arrays["lower"], np.float32)
+        self._upper = np.array(arrays["upper"], np.float32)
+        self._valid = np.array(arrays["valid"], bool)
+        self._thr = np.array(arrays["thresholds"], np.float32)
+        self._bucket_used = np.array(arrays["bucket_used"], bool)
+        self._slot_used = np.array(arrays["slot_used"], bool)
+        self._tenants = {d["tenant_id"]: TenantEntry(**d)
+                         for d in meta["tenants"]}
+        self.generation = int(meta["generation"])
+        self._bump()  # drop caches; device views rebuild from the new bytes
+
     # -- device views -------------------------------------------------------
 
     def device_bank(self) -> TemplateBank:

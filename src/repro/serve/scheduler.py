@@ -27,12 +27,18 @@ observable (`SchedulerStats.occupancy`).
 
 The scheduler knows nothing of the cascade: it returns `(pred, margin)` per
 slot and the service layer (`repro.serve.acam_service`) decides
-accept-at-ACAM vs escalate-to-CNN-head.
+accept-at-ACAM vs escalate-to-CNN-head. It does own two resilience duties:
+`expire()` pops requests that outlived the cascade's per-request deadline
+(the FIFO prefix), and every tick's wall time heartbeats into a
+`repro.ft.elastic.StragglerMonitor` — slow-tick strikes are surfaced
+through `SchedulerStats.slow_ticks` / `last_verdict` so the control plane
+can shed load or shrink the mesh before latency collapses.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from collections import deque
 from typing import Any
 
@@ -41,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import match as match_lib
+from repro.ft.elastic import StragglerMonitor
 from repro.serve.registry import TemplateBankRegistry, TenantEntry
 
 
@@ -80,8 +87,12 @@ class SchedulerStats:
     filled_slots: int = 0
     min_fill: int | None = None
     max_fill: int = 0
+    tick_time_s: float = 0.0  # summed dispatch wall time
+    slow_ticks: int = 0  # ticks flagged by the straggler monitor
+    expired: int = 0  # requests expired past their queue deadline
 
-    def record_tick(self, fill: int) -> None:
+    def record_tick(self, fill: int, *, dt_s: float = 0.0,
+                    slow: bool = False) -> None:
         self.ticks += 1
         self.classify_dispatches += 1
         self.served += fill
@@ -89,6 +100,8 @@ class SchedulerStats:
         self.max_fill = max(self.max_fill, fill)
         self.min_fill = fill if self.min_fill is None else \
             min(self.min_fill, fill)
+        self.tick_time_s += dt_s
+        self.slow_ticks += int(slow)
 
     @property
     def occupancy(self) -> float:
@@ -106,6 +119,9 @@ class SchedulerStats:
             "min_fill": self.min_fill or 0,
             "max_fill": self.max_fill,
             "slots": self.slots,
+            "tick_time_s": round(self.tick_time_s, 6),
+            "slow_ticks": self.slow_ticks,
+            "expired": self.expired,
         }
 
 
@@ -147,7 +163,8 @@ class MicroBatchScheduler:
     def __init__(self, registry: TemplateBankRegistry, *, slots: int = 64,
                  method: str = "feature_count", alpha: float = 1.0,
                  backend: str | None = None,
-                 engine: match_lib.EngineConfig | None = None):
+                 engine: match_lib.EngineConfig | None = None,
+                 monitor: StragglerMonitor | None = None):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         self.registry = registry
@@ -161,6 +178,13 @@ class MicroBatchScheduler:
                 margin=True)
             self.backend = backend
         self.stats = SchedulerStats(slots=slots)
+        #: every tick's wall time heartbeats into this monitor
+        #: (`StragglerMonitor.observe`): a tick blowing past the rolling
+        #: median accrues strikes, surfaced via stats.slow_ticks and
+        #: `last_verdict` — the service's health() view.
+        self.monitor = monitor if monitor is not None else StragglerMonitor(
+            n_hosts=1)
+        self.last_verdict: dict | None = None
         self._queue: deque[WorkItem] = deque()
 
     @property
@@ -185,10 +209,24 @@ class MicroBatchScheduler:
     def submit(self, item: WorkItem) -> None:
         self._queue.append(item)
 
+    def expire(self, deadline_s: float,
+               now: float | None = None) -> list[WorkItem]:
+        """Pop queued items older than ``deadline_s`` (the cascade's
+        per-request deadline). The queue is FIFO, so expired items are a
+        prefix; the service answers them with a deadline error instead of
+        serving them uselessly late."""
+        now = time.perf_counter() if now is None else now
+        out: list[WorkItem] = []
+        while self._queue and now - self._queue[0].submit_t > deadline_s:
+            out.append(self._queue.popleft())
+        self.stats.expired += len(out)
+        return out
+
     def tick(self) -> list[SlotResult]:
         """Serve one micro-batch; returns [] when the queue is empty."""
         if not self._queue:
             return []
+        t0 = time.perf_counter()
         popped = [self._queue.popleft()
                   for _ in range(min(self.slots, len(self._queue)))]
         # resolve placements NOW: queued requests must see the tenant's
@@ -226,7 +264,10 @@ class MicroBatchScheduler:
             jnp.asarray(hi), config=cfg, mesh_gen=context.generation())
         pred = np.asarray(pred)
         margin = np.asarray(margin)
-        self.stats.record_tick(len(batch))
+        dt = time.perf_counter() - t0
+        self.last_verdict = self.monitor.observe(0, dt)
+        self.stats.record_tick(len(batch), dt_s=dt,
+                               slow=bool(self.last_verdict["stragglers"]))
 
         return dead + [
             SlotResult(item=item, entry=entry,

@@ -1,0 +1,172 @@
+"""Durable service state: snapshot/restore for the hybrid serving tier.
+
+A `HybridService` is a pile of registers a power cycle would erase: the
+registry's super-bank and tenant placements, per-tenant thresholds and
+taus, the stacked CNN escalation heads, and the `ServiceSpec` in force.
+This module folds ALL of it into one pytree and pushes it through the
+existing atomic-rename `repro.checkpoint.Checkpointer`, so a killed
+service restarts from its last durable snapshot and serves **bit-identical
+predictions, margins and escalation decisions** — the super-bank a
+restored scheduler gathers is the same bytes, the taus resolve to the same
+values, the heads are the same tables.
+
+Layout: one step directory holds the numpy state as ``.npy`` leaves
+(registry arrays + head tables) plus a ``meta`` leaf — the JSON metadata
+(spec, tenant placements, runtimes, counters) encoded as a uint8 array so
+the whole snapshot rides the checkpointer's one atomicity contract instead
+of inventing a second sidecar format.
+
+Restore builds through the spec front door and then adopts the snapshot
+state wholesale — `TemplateBankRegistry.load_state` reconstructs
+placements without a single `register()` call. Restoring onto a
+*different* mesh is the `repro.ft.elastic.remesh_restore` idiom applied to
+serving: boot mesh-less from the snapshot's spec, then hand the target
+mesh to `HybridService.reconfigure`, which re-packs the super-bank to the
+new shard boundaries (elastic shrink/grow as an ordinary reconfigure
+transition, bit-identical by the engine's cross-shard reduce contract).
+
+    ckpt = Checkpointer("/var/lib/acam/ckpt")
+    svc.snapshot(ckpt)                      # periodic, async-capable
+    ...process dies...
+    svc, report = HybridService.restore(ckpt)            # same mesh
+    svc, report = HybridService.restore(                 # 2 -> 1 shrink
+        ckpt, mesh=MeshSpec(bank_shards=1))
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import energy as energy_lib
+from repro.serve.spec import MeshSpec, ServiceSpec
+
+_FORMAT = 1
+
+
+class SnapshotError(RuntimeError):
+    """No usable snapshot, or the snapshot does not fit the request."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RestoreReport:
+    """What a restore did (and what it cost — the recovery-time number the
+    chaos harness tracks)."""
+
+    step: int  # checkpoint step restored from
+    spec: ServiceSpec  # spec now in force (post any remesh)
+    tenants: int  # placements adopted, zero re-registrations
+    restore_s: float  # load -> service ready wall time
+    resharded: bool  # True: restored onto a different shard count
+    actions: tuple[str, ...]  # reconfigure transition log (remesh path)
+
+
+def service_state(svc) -> dict:
+    """The service's full durable state as one dict pytree (host numpy
+    copies only — safe to hand to the async checkpoint writer)."""
+    arrays, reg_meta = svc.registry.snapshot_state()
+    meta = {
+        "format": _FORMAT,
+        "spec": svc.spec.to_dict(),
+        "registry": reg_meta,
+        "tenants": {tid: {"has_head": rt.has_head, "raw_tau": rt.raw_tau}
+                    for tid, rt in svc._tenants.items()},
+        "next_id": svc._next_id,
+        "has_heads": svc._head_w is not None,
+    }
+    tree = {"registry": arrays,
+            "meta": np.frombuffer(json.dumps(meta).encode("utf-8"),
+                                  dtype=np.uint8).copy()}
+    if svc._head_w is not None:
+        tree["head_w"] = svc._head_w.copy()
+        tree["head_b"] = svc._head_b.copy()
+    return tree
+
+
+def save_snapshot(svc, ckpt: Checkpointer, step: int | None = None, *,
+                  blocking: bool = True) -> int:
+    """Persist the service through the checkpointer's atomic-rename path.
+
+    ``step=None`` continues the directory's step sequence (a restarted
+    service keeps counting from where the last incarnation stopped).
+    Returns the step written (or queued, when ``blocking=False``)."""
+    if step is None:
+        last = ckpt.latest_step()
+        step = (max(last if last is not None else -1,
+                    getattr(svc, "_last_snapshot_step", -1)) + 1)
+    svc._last_snapshot_step = step
+    ckpt.save(step, service_state(svc), blocking=blocking)
+    return step
+
+
+def load_state(ckpt: Checkpointer, step: int | None = None
+               ) -> tuple[int, dict, dict]:
+    """Read a snapshot back: ``(step, meta, tree)``. ``step=None`` picks
+    the latest complete step (the atomic-rename contract guarantees a
+    published step dir is whole)."""
+    if step is None:
+        step = ckpt.latest_step()
+        if step is None:
+            raise SnapshotError(f"no complete snapshot under {ckpt.dir}")
+    tree = ckpt.restore_dict(step)
+    meta = json.loads(bytes(np.asarray(tree["meta"], np.uint8)).decode())
+    if meta.get("format") != _FORMAT:
+        raise SnapshotError(f"snapshot format {meta.get('format')!r} != "
+                            f"supported {_FORMAT}")
+    return step, meta, tree
+
+
+def restore_service(ckpt: Checkpointer, step: int | None = None, *,
+                    mesh: MeshSpec | None = None, cls=None):
+    """Rebuild a ready-to-serve `HybridService` from its latest (or a
+    given) snapshot. Returns ``(service, RestoreReport)``.
+
+    ``mesh`` restores onto a DIFFERENT mesh than the one snapshotted —
+    elastic shrink/grow across a restart (fewer devices after a failure,
+    more after repair): the registry state is adopted at the snapshot's
+    shard count first, then `reconfigure` re-packs to the target exactly
+    like a live reshard would.
+    """
+    from repro.serve.acam_service import _TenantRuntime
+    from repro.serve.control import HybridService
+
+    t0 = time.perf_counter()
+    step, meta, tree = load_state(ckpt, step)
+    spec = ServiceSpec.from_dict(meta["spec"])
+
+    # boot mesh-less so a target mesh never has to fight the snapshot's:
+    # the registry state below is aligned to the SNAPSHOT shard count
+    cls = cls or HybridService
+    svc = cls.from_spec(spec._replace(mesh=spec.mesh._replace(install=False)))
+    svc.registry.load_state(tree["registry"], meta["registry"])
+    if meta["has_heads"]:
+        svc._head_w = np.array(tree["head_w"], np.float32)
+        svc._head_b = np.array(tree["head_b"], np.float32)
+        svc._head_gen += 1
+        svc._head_cache = None
+    svc._next_id = int(meta["next_id"])
+    svc._last_snapshot_step = step
+    for tid, info in meta["tenants"].items():
+        entry = svc.registry.get(tid)  # placement adopted, not re-registered
+        svc._tenants[tid] = _TenantRuntime(
+            has_head=info["has_head"], raw_tau=info["raw_tau"],
+            margin_tau=svc._resolve_tau(info["raw_tau"])
+            if info["has_head"] else None,
+            backend_j=energy_lib.backend_energy(
+                entry.valid_rows, svc.registry.num_features))
+
+    # remesh_restore idiom: the target mesh (the snapshot's own, or the
+    # override) is an ordinary reconfigure transition over the restored
+    # state — reshard + mesh install + retrace, bit-identical results
+    target = spec if mesh is None else spec._replace(mesh=mesh)
+    resharded = target.mesh.bank_shards != meta["registry"]["bank_shards"]
+    actions: tuple[str, ...] = ()
+    if target != svc.spec:
+        actions = svc.reconfigure(target).actions
+    return svc, RestoreReport(
+        step=step, spec=svc.spec, tenants=len(meta["tenants"]),
+        restore_s=time.perf_counter() - t0, resharded=resharded,
+        actions=actions)

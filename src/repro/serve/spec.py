@@ -79,7 +79,22 @@ class SchedulerSpec(NamedTuple):
 
 
 class CascadeSpec(NamedTuple):
-    """Confidence cascade + paper §V-D energy attribution."""
+    """Confidence cascade + paper §V-D energy attribution + the overload
+    policy. The paper's asymmetry — E_backend (ACAM) is orders of magnitude
+    below E_frontend (CNN) — is what makes graceful degradation cheap: when
+    the service is overloaded it keeps answering every request from the
+    ACAM stage alone (load-shed mode skips the CNN escalation), instead of
+    queueing into a latency collapse.
+
+    ``deadline_ms``   per-request deadline: queued requests older than this
+                      at tick time are expired with an error response
+                      instead of being served uselessly late (None: off).
+    ``shed_queue``    queue depth at/past which the service enters load-shed
+                      mode — ticks answer from the ACAM stage alone, no
+                      escalation dispatch (None: never shed on depth).
+    ``shed_p99_ms``   rolling p99 latency budget; exceeding it also enters
+                      load-shed mode until the recent window recovers
+                      (None: never shed on latency)."""
 
     tau: float = 8.0  # accept threshold, in tau_units
     tau_units: str = "count"  # "count" (0..N) | "fraction" (0..1)
@@ -88,6 +103,9 @@ class CascadeSpec(NamedTuple):
     frontend_sparsity: float = 0.80
     softmax_head_ops: int = 7_850
     paper_faithful: bool = True
+    deadline_ms: float | None = None  # per-request queue deadline
+    shed_queue: int | None = None  # load-shed on queue depth
+    shed_p99_ms: float | None = None  # load-shed on rolling p99
 
 
 TAU_UNITS = ("count", "fraction")
@@ -135,6 +153,18 @@ class ServiceSpec(NamedTuple):
             raise ValueError(f"slots must be >= 1, got {sched.slots}")
         if casc.max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {casc.max_queue}")
+        if casc.deadline_ms is not None and casc.deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0 (or None), got "
+                             f"{casc.deadline_ms}")
+        if casc.shed_queue is not None and not (
+                1 <= casc.shed_queue <= casc.max_queue):
+            raise ValueError(
+                f"shed_queue must sit inside the admission bound "
+                f"[1, {casc.max_queue}], got {casc.shed_queue} (a shed "
+                "threshold past max_queue can never trigger)")
+        if casc.shed_p99_ms is not None and casc.shed_p99_ms <= 0:
+            raise ValueError(f"shed_p99_ms must be > 0 (or None), got "
+                             f"{casc.shed_p99_ms}")
         if casc.tau_units not in TAU_UNITS:
             raise ValueError(f"unknown tau_units {casc.tau_units!r}; "
                              f"use {TAU_UNITS}")
