@@ -37,13 +37,27 @@ outgrows one device. (On this CPU container both run through Pallas
 interpret, so the sharded rows are a correctness-path number; the
 crossover itself is a TPU measurement.)
 
-**Resilience rows** (`benchmarks/traces.py` harness): ``"trace": "burst"``
+**Resilience rows** (`benchmarks/traces.py` harness) run with the flight
+recorder's JSONL event log armed and RE-DERIVE their headline numbers
+from it rather than poking service internals: ``"trace": "burst"``
 replays a seeded bursty Zipf trace with the overload policy armed and adds
-``p99_burst_ms`` / ``p99_calm_ms`` / ``shed_rate``; ``"trace": "chaos"``
-kills the service mid-trace, restores it from its durable snapshot, asserts
-bit-identity against a clean build and adds ``recovery_ms`` /
-``lost_in_flight``. ``--chaos`` runs only the chaos smoke and appends its
-row to an existing ``BENCH_serving.json`` (the CI resilience job).
+``p99_burst_ms`` / ``p99_calm_ms`` / ``shed_rate`` / ``shed_intervals``
+(shed_on..shed_off episodes reconstructed from the log, shed-tick counts
+cross-checked against the registry); ``"trace": "chaos"`` kills the
+service mid-trace, restores it from its durable snapshot, asserts
+bit-identity against a clean build and adds ``recovery_ms`` (the log's
+``restore`` event) / ``lost_in_flight`` (queue depth on the dead
+incarnation's last ``tick`` line). ``--chaos`` runs only the chaos smoke
+and appends its row to an existing ``BENCH_serving.json``; with
+``--telemetry-dir DIR`` it leaves ``DIR/events.jsonl`` +
+``DIR/metrics.prom`` behind for `python -m repro.obs.export` validation
+(the CI telemetry-smoke job).
+
+The **telemetry-overhead row** (`telemetry_overhead_bench`) serves one
+identical stream twice — span sampling off / full flight recorder with
+the JSONL sink — asserts preds/margins/escalations are bit-identical
+either way, and records ``telemetry_overhead_pct`` (the tests hold the
+same comparison under 5%).
 
 ``--smoke`` restricts the sweep for CI. `run()` keeps the harness contract
 used by benchmarks/run.py: a list of ``{"name", "us_per_call", "derived"}``
@@ -66,11 +80,14 @@ NUM_CLASSES = 10
 
 
 def make_spec(slots: int, *, requests: int, backend: str | None = None,
-              bank_shards: int = 1, install_mesh: bool = False):
+              bank_shards: int = 1, install_mesh: bool = False,
+              telemetry_dir: str | None = None, span_sample: float = 1.0):
     """The bench's one `ServiceSpec`: every measurement constructs through
     the spec path (`HybridService.from_spec`), never the legacy keywords.
     Taus ride in explicit match-count units; the service converts to the
-    backend's native margin units itself."""
+    backend's native margin units itself. ``telemetry_dir`` arms the
+    flight recorder's JSONL event log (the resilience rows re-derive
+    their numbers from it)."""
     from repro import match as match_lib
     from repro.match.config import EngineConfig
     from repro.serve import spec as spec_lib
@@ -86,6 +103,8 @@ def make_spec(slots: int, *, requests: int, backend: str | None = None,
         scheduler=spec_lib.SchedulerSpec(slots=slots),
         cascade=spec_lib.CascadeSpec(tau=8.0, tau_units="count",
                                      max_queue=max(requests, 4096)),
+        obs=spec_lib.ObsSpec(telemetry_dir=telemetry_dir,
+                             span_sample=span_sample),
     )
 
 
@@ -283,6 +302,94 @@ def reshard_bench(*, seed: int = 0, tenants: int = 8, slots: int = 64,
     return entry
 
 
+def telemetry_overhead_bench(*, smoke: bool = False, seed: int = 0) -> dict:
+    """The flight recorder's tax: serve the IDENTICAL request stream twice
+    — spans sampled out and no JSONL sink, then the full recorder (every
+    request a span, event log on) — and record the per-request overhead.
+    Doubles as the purity check: preds/margins/escalations must be
+    bit-identical either way (telemetry observes, never steers)."""
+    import tempfile
+
+    from repro.serve import acam_service as svc_lib
+    from repro.serve import spec as spec_lib
+    from repro.serve.control import HybridService
+
+    tenants, slots = 8, 64
+    requests = 256 if smoke else 1024
+
+    def build(obs):
+        svc = HybridService.from_spec(make_spec(
+            slots, requests=requests)._replace(obs=obs))
+        protos = []
+        for t in range(tenants):
+            bank, head, p = svc_lib.make_synthetic_tenant(
+                seed * 1000 + t, num_classes=NUM_CLASSES,
+                num_features=NUM_FEATURES)
+            svc.register_tenant(f"t{t}", bank, head=head)
+            protos.append(p)
+        rng = np.random.RandomState(seed)
+        reqs = []
+        for i, t in enumerate(rng.randint(0, tenants, size=requests)):
+            feats, _ = svc_lib.sample_tenant_queries(seed + i, protos[t], 1,
+                                                     noise=0.8)
+            reqs.append(svc_lib.ClassifyRequest(f"t{t}", feats[0]))
+        # full-stream warmup: compiles EVERY bucketed batch shape the
+        # measured passes will hit (a 1-request warmup leaves the first
+        # run paying all the compiles and poisons the comparison)
+        svc.serve(reqs)
+        return svc, reqs
+
+    def measure(svc, reqs):
+        svc.reset_metrics()
+        sig = [(r.tenant_id, r.pred, r.escalated, round(r.margin, 6))
+               for r in svc.serve(reqs)]
+        return svc.metrics(), sig
+
+    # INTERLEAVED passes (base, telemetry, base, ...) so clock drift
+    # across the run hits both arms equally, then the MEDIAN us/request
+    # per arm: a one-sided hiccup (GC pause, slow JSONL flush) lands in
+    # one pass of one arm and the median rejects it, where a min would
+    # bias low and a mean would smear it in
+    base_svc, base_reqs = build(spec_lib.ObsSpec(span_sample=0.0))
+    with tempfile.TemporaryDirectory() as td:
+        tel_svc, tel_reqs = build(spec_lib.ObsSpec(telemetry_dir=td,
+                                                   span_sample=1.0))
+        base_us_all, tel_us_all = [], []
+        base_sig = tel_sig = tel_m = None
+        for _ in range(9):
+            m, base_sig = measure(base_svc, base_reqs)
+            base_us_all.append(1e6 / m["requests_per_s"])
+            m, tel_sig = measure(tel_svc, tel_reqs)
+            tel_us_all.append(1e6 / m["requests_per_s"])
+            if tel_m is None or \
+                    m["requests_per_s"] > tel_m["requests_per_s"]:
+                tel_m = m
+    assert tel_sig == base_sig, \
+        "telemetry changed served results (must be pure observation)"
+    base_us = float(np.median(base_us_all))
+    tel_us = float(np.median(tel_us_all))
+    entry = {
+        "tenants": tenants, "slots": slots, "requests": requests,
+        "classes": NUM_CLASSES, "matching_backend": "default",
+        "bank_sharding": 1,
+        "telemetry_overhead_pct": round(100.0 * (tel_us - base_us)
+                                        / base_us, 2),
+        "base_us_per_request": round(base_us, 3),
+        "telemetry_us_per_request": round(tel_us, 3),
+        "requests_per_s": tel_m["requests_per_s"],
+        "latency_p50_ms": tel_m["latency_p50_ms"],
+        "latency_p99_ms": tel_m["latency_p99_ms"],
+        "escalation_rate": tel_m["escalation_rate"],
+        "nj_per_request": tel_m["nj_per_request"],
+        "occupancy": tel_m["occupancy"],
+        "classify_dispatches": tel_m["classify_dispatches"],
+    }
+    print(f"telemetry overhead: {entry['telemetry_overhead_pct']:+.2f}% "
+          f"({base_us:.1f} -> {tel_us:.1f} us/request, bit-identical "
+          "results)")
+    return entry
+
+
 def _traces():
     """Import benchmarks/traces.py under both invocation styles (package
     via benchmarks.run, script dir on sys.path via `python
@@ -299,7 +406,12 @@ def burst_bench(*, smoke: bool = False, seed: int = 0) -> dict:
     against a service whose overload policy is armed (``shed_queue``), so
     burst phases push the queue past the threshold and ticks degrade to
     ACAM-only answers. The row tracks burst-phase p99 separately from calm
-    p99 and records how much of the traffic was shed."""
+    p99 and records how much of the traffic was shed — the shed numbers
+    are RE-DERIVED from the flight recorder's event log (tick lines +
+    shed_on/shed_off flips) and cross-checked against the registry."""
+    import tempfile
+
+    from repro.obs import read_events
     from repro.serve.control import HybridService
 
     traces = _traces()
@@ -308,15 +420,29 @@ def burst_bench(*, smoke: bool = False, seed: int = 0) -> dict:
         seed=seed, tenants=8, classes=NUM_CLASSES,
         num_features=NUM_FEATURES, requests=256 if smoke else 1024,
         burst=128, calm=8, phase_ticks=3)
-    spec = make_spec(slots, requests=cfg.requests)
-    spec = spec._replace(cascade=spec.cascade._replace(shed_queue=2 * slots))
-    svc = HybridService.from_spec(spec)
-    pool = traces.TenantPool(cfg)
-    pool.register_all(svc)
-    svc.serve([pool.request(0, seed + 1)])  # compile warmup
-    svc.reset_metrics()
-    svc, stats = traces.replay(svc, traces.make_trace(cfg), pool)
-    m = svc.metrics()
+    with tempfile.TemporaryDirectory() as td:
+        spec = make_spec(slots, requests=cfg.requests, telemetry_dir=td)
+        spec = spec._replace(
+            cascade=spec.cascade._replace(shed_queue=2 * slots))
+        svc = HybridService.from_spec(spec)
+        pool = traces.TenantPool(cfg)
+        pool.register_all(svc)
+        svc.serve([pool.request(0, seed + 1)])  # compile warmup
+        svc.reset_metrics()
+        svc, stats = traces.replay(svc, traces.make_trace(cfg), pool)
+        m = svc.metrics()
+        # the black box is the source of truth for the shed story: shed
+        # ticks are tick lines that dispatched in shed mode, shed requests
+        # sum over the same lines, episodes come from the flip events
+        events = read_events(svc.obs.events.path)
+        tick_lines = [e for e in events if e["kind"] == "tick"]
+        shed_ticks = sum(1 for e in tick_lines
+                         if e["shed_mode"] and e["fill"])
+        shed_requests = sum(e["shed"] for e in tick_lines)
+        shed_intervals = sum(1 for e in events if e["kind"] == "shed_on")
+    assert shed_ticks == m["load_shed_ticks"], \
+        (shed_ticks, m["load_shed_ticks"])
+    assert shed_requests == m["shed"], (shed_requests, m["shed"])
     entry = {
         "tenants": cfg.tenants, "slots": slots, "requests": cfg.requests,
         "classes": cfg.classes, "matching_backend": "default",
@@ -324,8 +450,9 @@ def burst_bench(*, smoke: bool = False, seed: int = 0) -> dict:
         "trace": "burst",
         "p99_burst_ms": stats["p99_burst_ms"],
         "p99_calm_ms": stats["p99_calm_ms"],
-        "shed_rate": m["shed_rate"],
-        "load_shed_ticks": m["load_shed_ticks"],
+        "shed_rate": round(shed_requests / max(m["completed"], 1), 4),
+        "load_shed_ticks": shed_ticks,
+        "shed_intervals": shed_intervals,
         "requests_per_s": m["requests_per_s"],
         "latency_p50_ms": m["latency_p50_ms"],
         "latency_p99_ms": m["latency_p99_ms"],
@@ -336,24 +463,36 @@ def burst_bench(*, smoke: bool = False, seed: int = 0) -> dict:
     }
     print(f"burst trace: p99 burst {entry['p99_burst_ms']} ms vs calm "
           f"{entry['p99_calm_ms']} ms, shed rate {entry['shed_rate']:.3f} "
-          f"({entry['load_shed_ticks']} shed ticks)")
+          f"({entry['load_shed_ticks']} shed ticks over "
+          f"{entry['shed_intervals']} episodes, from the event log)")
     return entry
 
 
-def chaos_bench(*, smoke: bool = False, seed: int = 0) -> dict:
+def chaos_bench(*, smoke: bool = False, seed: int = 0,
+                telemetry_dir: str | None = None) -> dict:
     """Kill-and-restore recovery time: replay a trace with a mid-stream
     kill injected (the service object is dropped — in-flight queue lost,
     durable snapshot survives) and measure snapshot-restore-to-serving
     wall time. Asserts the restored service is bit-identical to a clean
     build on a fixed probe set. Under ``REPRO_FORCE_MESH`` the service
     runs bank-sharded (spec-owned mesh), so the restore also exercises the
-    mesh-reinstall path."""
+    mesh-reinstall path.
+
+    The row's resilience numbers come out of the flight recorder's JSONL
+    event log — the snapshot rides the ``ObsSpec`` so the restored
+    incarnation reopens the SAME ``events.jsonl`` in append mode:
+    ``recovery_ms`` is the ``restore`` event's duration, ``lost_in_flight``
+    the queue depth on the dead incarnation's last ``tick`` line, both
+    cross-checked against the replay harness. ``telemetry_dir`` keeps the
+    log (plus a rendered ``metrics.prom``) on disk for the CI
+    telemetry-smoke job's `python -m repro.obs.export` pass."""
     import tempfile
 
     import jax
 
     from repro.checkpoint.checkpointer import Checkpointer
     from repro.distributed import context, forcemesh
+    from repro.obs import read_events, write_prometheus
     from repro.serve.control import HybridService
 
     traces = _traces()
@@ -368,10 +507,12 @@ def chaos_bench(*, smoke: bool = False, seed: int = 0) -> dict:
         seed=seed, tenants=8, classes=NUM_CLASSES,
         num_features=NUM_FEATURES, requests=192 if smoke else 768,
         burst=64, calm=8, phase_ticks=1)
-    spec = make_spec(slots, requests=cfg.requests,
-                     bank_shards=2 if sharded else 1, install_mesh=sharded)
     with tempfile.TemporaryDirectory() as td:
-        ckpt = Checkpointer(td, keep=3)
+        tel_dir = telemetry_dir or os.path.join(td, "telemetry")
+        spec = make_spec(slots, requests=cfg.requests,
+                         bank_shards=2 if sharded else 1,
+                         install_mesh=sharded, telemetry_dir=tel_dir)
+        ckpt = Checkpointer(os.path.join(td, "ckpt"), keep=3)
         svc = HybridService.from_spec(spec)
         pool = traces.TenantPool(cfg)
         pool.register_all(svc)
@@ -385,16 +526,36 @@ def chaos_bench(*, smoke: bool = False, seed: int = 0) -> dict:
         m = svc.metrics()
 
         # restored-vs-clean bit-identity probe: the restored incarnation
-        # must serve exactly what a never-killed service would
+        # must serve exactly what a never-killed service would (the clean
+        # build runs telemetry-sinks-off — also proving the kill/restore
+        # story is identical with and without the recorder's sinks)
         probe = [pool.request(t % cfg.tenants, 999_000 + t)
                  for t in range(64)]
         sig = [(r.tenant_id, r.pred, r.escalated, round(r.margin, 6))
                for r in svc.serve(probe)]
-        clean = HybridService.from_spec(spec)
+        clean = HybridService.from_spec(spec._replace(
+            obs=spec.obs._replace(telemetry_dir=None)))
         pool.register_all(clean)
         clean_sig = [(r.tenant_id, r.pred, r.escalated, round(r.margin, 6))
                      for r in clean.serve(probe)]
         assert sig == clean_sig, "restored service diverged from clean build"
+
+        # re-derive the resilience numbers from the black box (validating
+        # every line on the way): one restore event, snapshots before the
+        # kill, and the dead incarnation's final tick line still readable
+        events = read_events(svc.obs.events.path)
+        kills = [i for i, e in enumerate(events) if e["kind"] == "restore"]
+        assert len(kills) == 1, f"expected one restore event, got {kills}"
+        assert any(e["kind"] == "snapshot" for e in events[:kills[0]]), \
+            "no durable snapshot event before the kill"
+        pre_ticks = [e for e in events[:kills[0]] if e["kind"] == "tick"]
+        lost = pre_ticks[-1]["queue_depth"]
+        assert lost == stats["lost_in_flight"], \
+            (lost, stats["lost_in_flight"])
+        recovery_ms = events[kills[0]]["duration_ms"]
+        if telemetry_dir:
+            write_prometheus(svc.obs.registry,
+                             os.path.join(tel_dir, "metrics.prom"))
     if sharded:
         context.clear()
     entry = {
@@ -402,8 +563,8 @@ def chaos_bench(*, smoke: bool = False, seed: int = 0) -> dict:
         "classes": cfg.classes, "matching_backend": "default",
         "bank_sharding": 2 if sharded else 1,
         "trace": "chaos",
-        "recovery_ms": stats["recovery_ms"],
-        "lost_in_flight": stats["lost_in_flight"],
+        "recovery_ms": recovery_ms,
+        "lost_in_flight": lost,
         "requests_per_s": m["requests_per_s"],
         "latency_p50_ms": m["latency_p50_ms"],
         "latency_p99_ms": m["latency_p99_ms"],
@@ -415,7 +576,8 @@ def chaos_bench(*, smoke: bool = False, seed: int = 0) -> dict:
     print(f"chaos trace: killed mid-stream, restored bit-identical in "
           f"{entry['recovery_ms']:.1f} ms "
           f"({entry['lost_in_flight']} in-flight lost, "
-          f"bank_shards={entry['bank_sharding']})")
+          f"bank_shards={entry['bank_sharding']}; numbers from the "
+          "event log)")
     return entry
 
 
@@ -447,9 +609,12 @@ def sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
     if reshard is not None:
         entries.append(reshard)
     # resilience rows: p99-under-burst + shed rate, and kill/restore
-    # recovery time (benchmarks/traces.py chaos harness)
+    # recovery time (benchmarks/traces.py chaos harness), both re-derived
+    # from the flight recorder's event log
     entries.append(burst_bench(smoke=smoke, seed=seed))
     entries.append(chaos_bench(smoke=smoke, seed=seed))
+    # telemetry tax: sinks-off vs full recorder on one identical stream
+    entries.append(telemetry_overhead_bench(smoke=smoke, seed=seed))
     return entries
 
 
@@ -483,6 +648,8 @@ def run() -> list[dict]:
 
 
 def _row_name(e: dict) -> str:
+    if "telemetry_overhead_pct" in e:
+        return "serving_telemetry_overhead"
     if "reshard_downtime_ms" in e:
         return f"serving_reshard_1to{e['bank_sharding']}"
     if e.get("trace") == "chaos":
@@ -497,6 +664,10 @@ def _row_name(e: dict) -> str:
 
 
 def _row_derived(e: dict) -> str:
+    if "telemetry_overhead_pct" in e:
+        return (f"overhead={e['telemetry_overhead_pct']}%,"
+                f"base={e['base_us_per_request']}us,"
+                f"tel={e['telemetry_us_per_request']}us")
     if "reshard_downtime_ms" in e:
         return (f"downtime={e['reshard_downtime_ms']}ms,"
                 f"moved={e['tenants_moved']},"
@@ -530,6 +701,11 @@ def main() -> None:
                          "snapshot, assert bit-identity vs a clean build, "
                          "and append the recovery-time row to "
                          "BENCH_serving.json")
+    ap.add_argument("--telemetry-dir", default=None, metavar="DIR",
+                    help="with --chaos: keep the flight recorder's "
+                         "events.jsonl + metrics.prom in DIR so the CI "
+                         "telemetry-smoke job can validate them with "
+                         "`python -m repro.obs.export`")
     args = ap.parse_args()
     if args.reshard or args.chaos:
         from repro.distributed import forcemesh
@@ -541,7 +717,7 @@ def main() -> None:
             raise SystemExit("--reshard needs REPRO_FORCE_MESH=DxM")
         return
     if args.chaos:
-        entry = chaos_bench(smoke=True)
+        entry = chaos_bench(smoke=True, telemetry_dir=args.telemetry_dir)
         assert entry["recovery_ms"] is not None, "service never recovered"
         path = "BENCH_serving.json"
         if os.path.exists(path):

@@ -204,7 +204,10 @@ def _inject(svc, chaos: ChaosPlan, ticks: int, stats: dict):
         # the kill: in-flight queue dies with the process; durable state
         # survives. `tests/test_resilience.py` does this across a real
         # SIGKILL'd subprocess; here the dropped object is the same deal.
-        stats["lost_in_flight"] = svc.scheduler.qsize
+        # The loss is read from the public health() view (and the bench
+        # re-derives it from the JSONL event log — the dead incarnation's
+        # last "tick" line carries the same queue depth).
+        stats["lost_in_flight"] = svc.health()["queue_depth"]
         stats["killed"] = True
         del svc
         t0 = time.perf_counter()

@@ -129,6 +129,25 @@ def main():
           f"({m['classify_dispatches']} fused dispatches, escalation rate "
           f"{m['escalation_rate']:.3f}, {m['nj_per_request']:.2f} nJ/req)")
 
+    print("== telemetry: the flight recorder behind metrics()")
+    # every number above was a view over `svc.obs` (repro.obs): the
+    # latency quantiles are exact-from-buckets reads of ONE histogram
+    # (the shed check reads the identical value), the energy ledger is
+    # bit-exact with the per-response sum, and span conservation
+    # (started == finished + in-flight) is a structural property.
+    fleet = svc.obs.ledger.fleet()
+    spans = svc.obs.spans.conservation()
+    assert fleet["total_nj"] == sum(r.energy_j for r in responses) * 1e9
+    assert spans["started"] == spans["finished"] + spans["in_flight"]
+    print(f"   energy ledger: {fleet['total_nj']:.1f} nJ over "
+          f"{fleet['requests']} requests (backend share "
+          f"{fleet['backend_share']:.3f}; bit-exact with per-response sum)")
+    print(f"   latency p50/p99: {m['latency_p50_ms']:.3f}/"
+          f"{m['latency_p99_ms']:.3f} ms (exact from histogram buckets)")
+    print(f"   spans: {spans['started']} started == {spans['finished']} "
+          f"finished + {spans['in_flight']} in-flight "
+          f"(dispositions {spans['by_disposition']})")
+
     print("== energy (paper §V-D arithmetic)")
     nums = energy.paper_numbers()
     print(f"   back-end  : {nums['backend_nj']:.2f} nJ / inference (Eq. 14)")

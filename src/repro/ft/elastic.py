@@ -58,6 +58,15 @@ class StragglerMonitor:
     history: list[float] = field(default_factory=list)
     flagged: dict[int, int] = field(default_factory=dict)  # host -> strikes
     evict_after: int = 3
+    #: optional telemetry feed — `(verdict, flagged) -> None`, called after
+    #: every heartbeat. The serving tier points this at
+    #: `repro.obs.FlightRecorder.record_straggler`, so per-host strike
+    #: counts and the current deadline surface as registry gauges.
+    sink: Any = None
+
+    def _publish(self, verdict: dict) -> None:
+        if self.sink is not None:
+            self.sink(verdict, dict(self.flagged))
 
     def step_times(self, times_s: dict[int, float]) -> dict:
         """Feed per-host durations for one step; returns the policy verdict."""
@@ -72,12 +81,14 @@ class StragglerMonitor:
                 self.flagged[h] = 0
         evict = [h for h, strikes in self.flagged.items()
                  if strikes >= self.evict_after]
-        return {
+        verdict = {
             "deadline_s": deadline,
             "stragglers": slow,
             "evict": evict,  # launcher responds with elastic re-mesh
             "skip_contribution": slow,  # bounded-staleness option
         }
+        self._publish(verdict)
+        return verdict
 
     def observe(self, host: int, dt_s: float, *, window: int = 64) -> dict:
         """Single-stream variant of `step_times`: one duration per call,
@@ -104,12 +115,14 @@ class StragglerMonitor:
             self.flagged[host] = 0
         evict = [h for h, strikes in self.flagged.items()
                  if strikes >= self.evict_after]
-        return {
+        verdict = {
             "deadline_s": deadline,
             "stragglers": slow,
             "evict": evict,
             "skip_contribution": slow,
         }
+        self._publish(verdict)
+        return verdict
 
 
 class Heartbeat:

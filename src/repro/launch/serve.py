@@ -63,6 +63,9 @@ def build_acam_spec(args):
                                      tau_units="count",
                                      deadline_ms=args.deadline_ms,
                                      shed_queue=args.shed_queue),
+        obs=spec_lib.ObsSpec(telemetry_dir=args.telemetry_dir,
+                             span_sample=args.span_sample,
+                             profile_annotations=args.profile_annotations),
     )
 
 
@@ -161,6 +164,20 @@ def run_acam(args) -> dict:
           f"{m['nj_per_request']:.2f} nJ/request, "
           f"{m['requests_per_s']:.1f} req/s, "
           f"p50 {m['latency_p50_ms']:.1f} ms / p99 {m['latency_p99_ms']:.1f} ms")
+    fleet = svc.obs.ledger.fleet()
+    print(f"  energy ledger: {fleet['total_nj']:.1f} nJ fleet total, "
+          f"backend share {fleet['backend_share']:.3f} "
+          f"(E_backend {fleet['backend_nj']:.1f} nJ / "
+          f"E_frontend {fleet['frontend_nj']:.1f} nJ)")
+    if spec.obs.telemetry_dir:
+        import os
+
+        from repro.obs import write_prometheus
+
+        prom = os.path.join(spec.obs.telemetry_dir, "metrics.prom")
+        write_prometheus(svc.obs.registry, prom)
+        print(f"  telemetry: {svc.obs.events.path} (event log), "
+              f"{prom} (Prometheus scrape)")
     return {"accuracy": acc, **m}
 
 
@@ -218,6 +235,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--shed-queue", type=int, default=None,
                     help="queue depth at which the service enters load-shed "
                          "mode (ACAM stage alone, no CNN escalation)")
+    ap.add_argument("--telemetry-dir", default=None, metavar="DIR",
+                    help="flight-recorder sinks: append a JSONL event log "
+                         "(DIR/events.jsonl, one line per serving tick + "
+                         "every lifecycle event) and write a Prometheus "
+                         "scrape file (DIR/metrics.prom) after serving")
+    ap.add_argument("--span-sample", type=float, default=1.0,
+                    help="fraction of requests carrying a full per-request "
+                         "span (deterministic in the request id)")
+    ap.add_argument("--profile-annotations", action="store_true",
+                    help="wrap the fused dispatch in a jax.profiler "
+                         "TraceAnnotation (visible in device traces)")
     ap.add_argument("--device-noise", default="global",
                     choices=("global", "per_shard"),
                     help="sigma_program noise semantics for the device "

@@ -1,0 +1,9 @@
+"""`python -m repro.obs <events.jsonl> [metrics.prom]` — the CI
+telemetry-smoke validator (same CLI as `repro.obs.export`, without
+runpy's found-in-sys.modules warning)."""
+import sys
+
+from .export import _main
+
+if __name__ == "__main__":
+    sys.exit(_main(sys.argv[1:]))

@@ -23,6 +23,14 @@ Turns the fused Pallas classify kernel into a service tier:
            -> per-request `ClassifyResponse` + aggregated service metrics
               (throughput, p50/p99 latency, escalation rate, nJ/request).
 
+Every number the service reports lives in its `repro.obs.FlightRecorder`
+(`self.obs`): `metrics()` and `health()` are thin reads over its metric
+registry, per-request spans travel admission -> tick -> response through
+it, the SS V-D energy ledger aggregates there, and — when the spec sets
+`obs.telemetry_dir` — a JSONL event log records every tick and lifecycle
+event. The shed_p99_ms overload check reads the SAME histogram quantile
+`metrics()` reports (one source of truth, not three reservoirs).
+
 Escalated slots from one tick are themselves coalesced into one dense-head
 dispatch (padded to power-of-two buckets so the escalation path compiles a
 handful of shapes, ever). Tenants without a registered head never escalate.
@@ -39,7 +47,6 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +55,7 @@ import numpy as np
 from repro.core import energy as energy_lib
 from repro.core import templates
 from repro.core.templates import TemplateBank
+from repro.obs import FlightRecorder
 from repro.serve.registry import RegistryError, TemplateBankRegistry
 from repro.serve.scheduler import MicroBatchScheduler, SlotResult, WorkItem
 
@@ -181,6 +189,10 @@ class ACAMService:
         `HybridService.from_spec`.)"""
         spec.validate()
         self.spec = spec
+        #: the flight recorder: metric registry + span recorder + energy
+        #: ledger + event log. Lives as long as the service (reconfigure
+        #: rebuilds schedulers, never this).
+        self.obs = FlightRecorder(spec.obs)
         self.registry = TemplateBankRegistry(
             spec.registry.num_features, k_max=spec.registry.k_max,
             class_bucket=spec.registry.class_bucket,
@@ -188,11 +200,10 @@ class ACAMService:
             initial_tenants=spec.registry.initial_tenants,
             bank_shards=spec.mesh.bank_shards)
         self.scheduler = MicroBatchScheduler(
-            self.registry, slots=spec.scheduler.slots, engine=spec.engine)
-        #: rolling latency window feeding the shed_p99_ms overload signal;
-        #: bounded so a burst's tail stops poisoning the estimate once the
-        #: service recovers
-        self._recent_lat: deque[float] = deque(maxlen=256)
+            self.registry, slots=spec.scheduler.slots, engine=spec.engine,
+            recorder=self.obs)
+        self.scheduler.monitor.sink = self.obs.record_straggler
+        self.obs.slots_gauge.set(spec.scheduler.slots)
         #: control-plane failure state (simulated device loss): None = every
         #: jax device is healthy; else the surviving device list every mesh
         #: (re)install is built over (`HybridService.handle_device_loss`)
@@ -205,7 +216,6 @@ class ACAMService:
         self._head_gen = 0
         self._next_id = 0
         self._apply_cascade(spec)
-        self._m = _Metrics()
 
     def _apply_cascade(self, spec) -> None:
         """(Re)derive everything the cascade spec controls: the legacy
@@ -327,25 +337,28 @@ class ACAMService:
     # -- request path -------------------------------------------------------
 
     def submit(self, request: ClassifyRequest) -> int:
-        """Admit one request into the scheduler queue; returns request id."""
+        """Admit one request into the scheduler queue; returns request id.
+        Admission opens the request's span (`repro.obs.SpanRecorder`)."""
         if request.tenant_id not in self.registry:
-            self._m.rejected += 1
+            self.obs.record_rejected()
             raise AdmissionError(f"unknown tenant {request.tenant_id!r}")
         feats = np.asarray(request.features, np.float32).reshape(-1)
         if feats.shape[0] != self.registry.num_features:
-            self._m.rejected += 1
+            self.obs.record_rejected()
             raise AdmissionError(
                 f"expected {self.registry.num_features} features, got "
                 f"{feats.shape[0]}")
         if self.scheduler.qsize >= self.config.max_queue:
-            self._m.rejected += 1
+            self.obs.record_rejected()
             raise AdmissionError(
                 f"queue full ({self.config.max_queue} pending)")
         self._next_id += 1
+        t_admit = time.perf_counter()
         self.scheduler.submit(WorkItem(
             request_id=self._next_id, tenant_id=request.tenant_id,
-            features=feats, submit_t=time.perf_counter()))
-        self._m.submitted += 1
+            features=feats, submit_t=t_admit))
+        self.obs.record_submit(self._next_id, request.tenant_id, t_admit)
+        self.obs.set_queue_depth(self.scheduler.qsize)
         return self._next_id
 
     def overloaded(self) -> bool:
@@ -353,16 +366,21 @@ class ACAMService:
         the queue has grown to ``cascade.shed_queue`` or the rolling p99
         latency exceeds ``cascade.shed_p99_ms`` — the next tick then runs
         in load-shed mode (ACAM stage alone, no CNN escalation: the paper's
-        E_backend << E_frontend asymmetry as an overload policy)."""
+        E_backend << E_frontend asymmetry as an overload policy).
+
+        The p99 here is `FlightRecorder.latency_quantile_ms(0.99)` — the
+        IDENTICAL read `metrics()['latency_p99_ms']` reports, from the
+        histogram's rolling window (bounded, so a burst's tail stops
+        poisoning the estimate once the service recovers; it also survives
+        `reset_metrics()`, which must never blind this check)."""
         casc = self.spec.cascade
         if casc.shed_queue is not None \
                 and self.scheduler.qsize >= casc.shed_queue:
             return True
-        if casc.shed_p99_ms is not None and len(self._recent_lat) >= 32:
-            p99 = float(np.percentile(
-                np.fromiter(self._recent_lat, np.float64), 99))
-            if p99 * 1e3 > casc.shed_p99_ms:
-                return True
+        if casc.shed_p99_ms is not None \
+                and self.obs.latency.window_count >= 32 \
+                and self.obs.latency_quantile_ms(0.99) > casc.shed_p99_ms:
+            return True
         return False
 
     def step(self) -> list[ClassifyResponse]:
@@ -385,16 +403,18 @@ class ACAMService:
                     latency_s=time.perf_counter() - item.submit_t,
                     error=f"deadline exceeded ({casc.deadline_ms} ms "
                           "in queue)"))
+        n_expired = len(responses)
         shedding = self.overloaded()
+        self.obs.set_shed_mode(shedding, queue_depth=self.scheduler.qsize)
         results = self.scheduler.tick()
         if not results:
             if responses:
-                self._m.record(responses,
-                               busy_s=time.perf_counter() - t0,
-                               escalation_dispatch=False)
+                self._finalize_step(responses, t0, shedding, fill=0,
+                                    n_expired=n_expired, dispatched=False,
+                                    escalation=False)
             return responses
         if shedding:
-            self._m.load_shed_ticks += 1
+            self.obs.record_shed_tick()
         escalate: list[SlotResult] = []
         keep: list[tuple[SlotResult, bool, bool]] = []
         for r in results:
@@ -431,11 +451,48 @@ class ACAMService:
                 tenant_id=r.item.tenant_id, pred=pred,
                 margin=r.margin, escalated=escalated, energy_j=e,
                 latency_s=now - r.item.submit_t, shed=shed))
-        self._m.record(responses, busy_s=now - t0,
-                       escalation_dispatch=bool(escalate))
-        self._recent_lat.extend(r.latency_s for r in responses
-                                if r.error is None)
+        self._finalize_step(responses, t0, shedding, fill=len(results),
+                            n_expired=n_expired, dispatched=True,
+                            escalation=bool(escalate), now=now)
         return responses
+
+    def _finalize_step(self, responses: list[ClassifyResponse], t0: float,
+                       shedding: bool, *, fill: int, n_expired: int,
+                       dispatched: bool, escalation: bool,
+                       now: float | None = None) -> None:
+        """Book one step into the flight recorder: close every response's
+        span (disposition + latency + SS V-D energy split), bump the busy
+        clock and queue gauge, and — when the event log is on — append the
+        step's "tick" line. Pure accounting: preds/margins/escalations are
+        already fixed by the time this runs, so telemetry can never change
+        a served answer."""
+        obs = self.obs
+        if escalation:
+            obs.record_escalation_dispatch()
+        for r in responses:
+            if r.error is not None:
+                obs.finish_request(r, 0.0, 0.0)
+            else:
+                rt = self._tenants[r.tenant_id]
+                obs.finish_request(
+                    r, rt.backend_j,
+                    self._frontend_j if r.escalated else 0.0)
+        now = time.perf_counter() if now is None else now
+        obs.add_busy(now - t0)
+        obs.set_queue_depth(self.scheduler.qsize)
+        if obs.events.enabled:
+            obs.emit(
+                "tick",
+                tick_id=obs.tick_seq - 1 if dispatched else -1,
+                fill=fill,
+                served=sum(r.error is None for r in responses),
+                escalated=sum(r.escalated for r in responses),
+                shed=sum(r.shed for r in responses),
+                expired=n_expired,
+                dt_ms=round(obs.last_dispatch_ms, 4) if dispatched else 0.0,
+                queue_depth=self.scheduler.qsize,
+                shed_mode=int(shedding),
+                energy_j=sum(r.energy_j for r in responses))
 
     def _run_escalation(self, escalate: list[SlotResult]) -> dict[int, int]:
         """Coalesce a tick's escalated slots into one dense-head dispatch."""
@@ -471,79 +528,87 @@ class ACAMService:
         return self.drain()
 
     def metrics(self) -> dict:
-        return self._m.as_dict(self.scheduler.stats)
+        """The service's aggregate view — every value is a read over the
+        flight recorder's registry/ledger (no service-private counters,
+        no reservoirs): counters for the totals, the energy ledger for
+        joules, and the ONE latency histogram for p50/p99 (the same
+        quantile the shed_p99_ms overload check compares against)."""
+        o = self.obs
+        completed = int(o.responses.total())
+        done = max(completed, 1)
+        escalated = int(o.responses.value(disposition="escalated"))
+        shed = int(o.responses.value(disposition="shed"))
+        failed = int(o.responses.value(disposition="expired")
+                     + o.responses.value(disposition="error"))
+        busy = o.busy_seconds.value()
+        ticks = int(o.ticks.value())
+        slots = self.scheduler.slots
+        energy_j = o.ledger.fleet_j()
+        return {
+            "submitted": int(o.submitted.value()),
+            "completed": completed,
+            "rejected": int(o.rejected.value()),
+            "failed": failed,
+            "escalated": escalated,
+            "escalation_rate": round(escalated / done, 4),
+            "shed": shed,
+            "shed_rate": round(shed / done, 4),
+            "load_shed_ticks": int(o.load_shed_ticks.value()),
+            "escalation_dispatches": int(o.esc_dispatches.value()),
+            "requests_per_s": round(completed / busy, 2) if busy else 0.0,
+            "latency_p50_ms": round(o.latency_quantile_ms(0.50), 3),
+            "latency_p99_ms": round(o.latency_quantile_ms(0.99), 3),
+            "energy_total_j": energy_j,
+            "nj_per_request": round(energy_j / done * 1e9, 4),
+            "ticks": ticks,
+            "classify_dispatches": int(o.dispatches.value()),
+            "served": int(o.served.value()),
+            "occupancy": round(o.filled_slots.value() / (ticks * slots), 4)
+            if ticks else 0.0,
+            "min_fill": int(o.fill_min.value()),
+            "max_fill": int(o.fill_max.value()),
+            "slots": slots,
+            "tick_time_s": round(o.tick_seconds.value(), 6),
+            "slow_ticks": int(o.slow_ticks.value()),
+            "expired": int(o.expired.value()),
+        }
 
     def health(self) -> dict:
         """Liveness view for operators and the chaos harness: straggler
-        strikes from the scheduler's tick heartbeats, queue depth, and
-        whether the next tick would run in load-shed mode."""
+        strikes (per-host gauges the `StragglerMonitor` feeds into the
+        registry), queue depth, and whether the next tick would run in
+        load-shed mode (via the same registry-backed `overloaded()`)."""
         verdict = self.scheduler.last_verdict or {}
         return {
             "queue_depth": self.scheduler.qsize,
             "load_shedding": self.overloaded(),
-            "slow_ticks": self.scheduler.stats.slow_ticks,
-            "straggler_strikes": dict(self.scheduler.monitor.flagged),
+            "slow_ticks": int(self.obs.slow_ticks.value()),
+            "straggler_strikes": {
+                int(labels["host"]): int(v)
+                for labels, v in self.obs.straggler_strikes.items()},
             "evict_verdict": list(verdict.get("evict", ())),
         }
 
     def reset_metrics(self) -> None:
-        """Zero counters/latencies (e.g. after a warmup burst)."""
+        """Zero the run counters (e.g. after a warmup burst). Exact
+        semantics, enforced by a regression test:
+
+        CLEARED    counters (submitted/completed/rejected/..., scheduler
+                   tick counters), cumulative latency-histogram counts,
+                   the energy ledger, per-run fill aggregates
+                   (min/max batch fill), and the scheduler's mirror
+                   `SchedulerStats`.
+        SURVIVING  gauges (queue depth, shed mode, straggler strikes —
+                   they describe the service NOW), the latency
+                   histogram's ROLLING window (the shed_p99_ms overload
+                   signal: a metrics reset must never blind load
+                   shedding), span conservation totals, in-flight spans,
+                   the tick-id sequence, straggler-monitor history, and
+                   the append-only event log."""
         from repro.serve.scheduler import SchedulerStats
 
-        self._m = _Metrics()
-        self._recent_lat.clear()
+        self.obs.reset()
         self.scheduler.stats = SchedulerStats(slots=self.scheduler.slots)
-
-
-@dataclasses.dataclass
-class _Metrics:
-    submitted: int = 0
-    completed: int = 0
-    escalated: int = 0
-    rejected: int = 0
-    failed: int = 0  # served with error (e.g. tenant evicted mid-queue)
-    shed: int = 0  # answered from ACAM alone under overload
-    load_shed_ticks: int = 0  # ticks served in load-shed mode
-    escalation_dispatches: int = 0
-    energy_j: float = 0.0
-    busy_s: float = 0.0
-    latencies: list = dataclasses.field(default_factory=list)
-    _MAX_LAT = 100_000  # latency reservoir bound
-
-    def record(self, responses: list[ClassifyResponse], *, busy_s: float,
-               escalation_dispatch: bool) -> None:
-        self.completed += len(responses)
-        self.failed += sum(r.error is not None for r in responses)
-        self.escalated += sum(r.escalated for r in responses)
-        self.shed += sum(r.shed for r in responses)
-        self.escalation_dispatches += int(escalation_dispatch)
-        self.energy_j += sum(r.energy_j for r in responses)
-        self.busy_s += busy_s
-        if len(self.latencies) < self._MAX_LAT:
-            self.latencies.extend(r.latency_s for r in responses)
-
-    def as_dict(self, sched_stats) -> dict:
-        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
-        done = max(self.completed, 1)
-        return {
-            "submitted": self.submitted,
-            "completed": self.completed,
-            "rejected": self.rejected,
-            "failed": self.failed,
-            "escalated": self.escalated,
-            "escalation_rate": round(self.escalated / done, 4),
-            "shed": self.shed,
-            "shed_rate": round(self.shed / done, 4),
-            "load_shed_ticks": self.load_shed_ticks,
-            "escalation_dispatches": self.escalation_dispatches,
-            "requests_per_s": round(self.completed / self.busy_s, 2)
-            if self.busy_s else 0.0,
-            "latency_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
-            "latency_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
-            "energy_total_j": self.energy_j,
-            "nj_per_request": round(self.energy_j / done * 1e9, 4),
-            **sched_stats.as_dict(),
-        }
 
 
 # ---------------------------------------------------------------------------

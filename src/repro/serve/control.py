@@ -164,6 +164,9 @@ class HybridService(ACAMService):
                 f"resharded super-bank {old.mesh.bank_shards} -> "
                 f"{new_spec.mesh.bank_shards} ({moved} tenant runs "
                 f"re-packed, 0 re-registrations)")
+            self.obs.emit("reshard",
+                          bank_shards_from=old.mesh.bank_shards,
+                          bank_shards_to=new_spec.mesh.bank_shards)
         if new_spec.mesh != old.mesh or reshard:
             if new_spec.mesh.install:
                 install_mesh(new_spec.mesh, devices=self._devices)
@@ -183,9 +186,11 @@ class HybridService(ACAMService):
             stats = self.scheduler.stats  # cumulative view stays coherent
             self.scheduler = MicroBatchScheduler(
                 self.registry, slots=new_spec.scheduler.slots,
-                engine=new_spec.engine, monitor=self.scheduler.monitor)
+                engine=new_spec.engine, monitor=self.scheduler.monitor,
+                recorder=self.obs)
             stats.slots = new_spec.scheduler.slots
             self.scheduler.stats = stats
+            self.obs.slots_gauge.set(new_spec.scheduler.slots)
             actions.append(f"scheduler slots {old.scheduler.slots} -> "
                            f"{new_spec.scheduler.slots}")
         if new_spec.cascade != old.cascade:
@@ -194,9 +199,13 @@ class HybridService(ACAMService):
         # backend/method as much as on the cascade block itself
         self._apply_cascade(new_spec)
         self.spec = new_spec
+        downtime_s = time.perf_counter() - t0
+        self.obs.emit("reconfigure", actions=list(actions),
+                      drained=len(drained),
+                      duration_ms=round(downtime_s * 1e3, 3))
         return ReconfigureReport(spec=new_spec, actions=tuple(actions),
                                  drained=drained,
-                                 downtime_s=time.perf_counter() - t0,
+                                 downtime_s=downtime_s,
                                  tenants_moved=moved)
 
     # ------------------------------------------------------- durability
@@ -208,8 +217,10 @@ class HybridService(ACAMService):
         step written. See `repro.serve.snapshot`."""
         from repro.serve import snapshot as snapshot_lib
 
-        return snapshot_lib.save_snapshot(self, ckpt, step,
+        step = snapshot_lib.save_snapshot(self, ckpt, step,
                                           blocking=blocking)
+        self.obs.emit("snapshot", step=step, path=str(ckpt.dir))
+        return step
 
     @classmethod
     def restore(cls, ckpt, step: int | None = None, *,
@@ -221,7 +232,12 @@ class HybridService(ACAMService):
         RestoreReport)``."""
         from repro.serve import snapshot as snapshot_lib
 
-        return snapshot_lib.restore_service(ckpt, step, mesh=mesh, cls=cls)
+        svc, report = snapshot_lib.restore_service(ckpt, step, mesh=mesh,
+                                                   cls=cls)
+        svc.obs.emit("restore", step=report.step,
+                     resharded=report.resharded,
+                     duration_ms=round(report.restore_s * 1e3, 3))
+        return svc, report
 
     # --------------------------------------------------- elastic failover
 
@@ -282,6 +298,8 @@ class HybridService(ACAMService):
             report = ReconfigureReport(
                 spec=self.spec, actions=actions, drained=drained,
                 downtime_s=time.perf_counter() - t0)
+        self.obs.emit("device_loss", lost=sorted(self._lost_devices),
+                      survivors=len(survivors))
         return dataclasses.replace(
             report, actions=report.actions + (
                 f"device loss: {len(self._lost_devices)} down, "
@@ -299,6 +317,7 @@ class HybridService(ACAMService):
             install_mesh(self.spec.mesh)
             actions = ("restored full fleet: mesh reinstalled over all "
                        "devices",)
+        self.obs.emit("device_heal", restored=len(self._avail_devices()))
         return ReconfigureReport(spec=self.spec, actions=actions,
                                  drained=drained,
                                  downtime_s=time.perf_counter() - t0)

@@ -36,6 +36,7 @@ can shed load or shrink the mesh before latency collapses.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -164,7 +165,8 @@ class MicroBatchScheduler:
                  method: str = "feature_count", alpha: float = 1.0,
                  backend: str | None = None,
                  engine: match_lib.EngineConfig | None = None,
-                 monitor: StragglerMonitor | None = None):
+                 monitor: StragglerMonitor | None = None,
+                 recorder=None):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         self.registry = registry
@@ -185,6 +187,11 @@ class MicroBatchScheduler:
         self.monitor = monitor if monitor is not None else StragglerMonitor(
             n_hosts=1)
         self.last_verdict: dict | None = None
+        #: optional `repro.obs.FlightRecorder`: the scheduler stamps every
+        #: dispatched request's span with the tick id / dequeue time and
+        #: feeds the registry's scheduler counters. `SchedulerStats` stays
+        #: as a plain in-object mirror (cheap, and directly inspectable).
+        self.recorder = recorder
         self._queue: deque[WorkItem] = deque()
 
     @property
@@ -220,6 +227,8 @@ class MicroBatchScheduler:
         while self._queue and now - self._queue[0].submit_t > deadline_s:
             out.append(self._queue.popleft())
         self.stats.expired += len(out)
+        if out and self.recorder is not None:
+            self.recorder.record_expired(len(out))
         return out
 
     def tick(self) -> list[SlotResult]:
@@ -258,16 +267,24 @@ class MicroBatchScheduler:
 
         cfg = self.engine_config._replace(
             backend=self.backend or match_lib.default_backend())
-        pred, _, margin = _batched_classify(
-            self.registry.device_bank(), self.registry.thresholds_table(),
-            jnp.asarray(feats), jnp.asarray(slot_idx), jnp.asarray(lo),
-            jnp.asarray(hi), config=cfg, mesh_gen=context.generation())
-        pred = np.asarray(pred)
-        margin = np.asarray(margin)
+        annotate = self.recorder.profile_span("acam_fused_dispatch") \
+            if self.recorder is not None else contextlib.nullcontext()
+        with annotate:
+            pred, _, margin = _batched_classify(
+                self.registry.device_bank(),
+                self.registry.thresholds_table(),
+                jnp.asarray(feats), jnp.asarray(slot_idx), jnp.asarray(lo),
+                jnp.asarray(hi), config=cfg, mesh_gen=context.generation())
+            pred = np.asarray(pred)
+            margin = np.asarray(margin)
         dt = time.perf_counter() - t0
         self.last_verdict = self.monitor.observe(0, dt)
-        self.stats.record_tick(len(batch), dt_s=dt,
-                               slow=bool(self.last_verdict["stragglers"]))
+        slow = bool(self.last_verdict["stragglers"])
+        self.stats.record_tick(len(batch), dt_s=dt, slow=slow)
+        if self.recorder is not None:
+            self.recorder.record_tick_dispatch(
+                [item.request_id for item in popped], len(batch), dt, slow,
+                t0)
 
         return dead + [
             SlotResult(item=item, entry=entry,

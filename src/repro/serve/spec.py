@@ -108,6 +108,38 @@ class CascadeSpec(NamedTuple):
     shed_p99_ms: float | None = None  # load-shed on rolling p99
 
 
+class ObsSpec(NamedTuple):
+    """Telemetry knobs for the service's flight recorder (`repro.obs`).
+
+    Telemetry is always on — the recorder is how `metrics()`/`health()`
+    and the overload policy see anything at all — so this spec only
+    shapes it: histogram resolution, the rolling-window length behind
+    the shed_p99_ms signal, span sampling, and the optional sinks.
+
+    ``latency_buckets_ms``  upper bounds (ms) of the request-latency
+                            histogram; quantiles are exact from these
+                            buckets, so resolution == bucket density.
+    ``latency_window``      rolling-window length (observations) behind
+                            `latency_p50/99_ms` and the shed_p99_ms
+                            overload check; survives `reset_metrics()`.
+    ``telemetry_dir``       when set, the service appends a JSONL event
+                            log (`events.jsonl`: one line per serving
+                            tick + every lifecycle event) under this
+                            directory. None: no event log.
+    ``span_sample``         fraction of requests carrying a full span
+                            (deterministic in the request id); span
+                            *conservation counters* always run.
+    ``profile_annotations`` wrap the fused dispatch in a
+                            `jax.profiler.TraceAnnotation` so device
+                            traces show serving-tick boundaries."""
+
+    latency_buckets_ms: tuple = ()  # () -> repro.obs default buckets
+    latency_window: int = 256
+    telemetry_dir: str | None = None
+    span_sample: float = 1.0
+    profile_annotations: bool = False
+
+
 TAU_UNITS = ("count", "fraction")
 
 
@@ -120,6 +152,7 @@ class ServiceSpec(NamedTuple):
     mesh: MeshSpec = MeshSpec()
     scheduler: SchedulerSpec = SchedulerSpec()
     cascade: CascadeSpec = CascadeSpec()
+    obs: ObsSpec = ObsSpec()
 
     # -- validation ---------------------------------------------------------
 
@@ -178,6 +211,18 @@ class ServiceSpec(NamedTuple):
         if not 0.0 <= casc.frontend_sparsity <= 1.0:
             raise ValueError(f"frontend_sparsity must be in [0, 1], got "
                              f"{casc.frontend_sparsity}")
+        obs = self.obs
+        b = obs.latency_buckets_ms
+        if b and (list(b) != sorted(set(b)) or b[0] <= 0):
+            raise ValueError(
+                f"latency_buckets_ms must be strictly increasing and "
+                f"positive, got {b}")
+        if obs.latency_window < 1:
+            raise ValueError(f"latency_window must be >= 1, got "
+                             f"{obs.latency_window}")
+        if not 0.0 <= obs.span_sample <= 1.0:
+            raise ValueError(f"span_sample must be in [0, 1], got "
+                             f"{obs.span_sample}")
         dev = self.engine.device or ACAMConfig()
         if (self.engine.backend == "device" and mesh.bank_shards > 1
                 and dev.sigma_program > 0.0
@@ -220,12 +265,14 @@ class ServiceSpec(NamedTuple):
             "mesh": self.mesh._asdict(),
             "scheduler": self.scheduler._asdict(),
             "cascade": self.cascade._asdict(),
+            "obs": self.obs._asdict(),
         }
         eng = d["engine"]
         if eng["block"] is not None:
             eng["block"] = list(eng["block"])
         if eng["device"] is not None:
             eng["device"] = self.engine.device._asdict()
+        d["obs"]["latency_buckets_ms"] = list(self.obs.latency_buckets_ms)
         return d
 
     @classmethod
@@ -235,12 +282,17 @@ class ServiceSpec(NamedTuple):
             eng["block"] = tuple(int(b) for b in eng["block"])
         if eng.get("device") is not None:
             eng["device"] = ACAMConfig(**eng["device"])
+        obs = dict(d.get("obs", {}))
+        if "latency_buckets_ms" in obs:
+            obs["latency_buckets_ms"] = tuple(
+                float(x) for x in obs["latency_buckets_ms"])
         return cls(
             registry=RegistrySpec(**d.get("registry", {})),
             engine=EngineConfig(**eng),
             mesh=MeshSpec(**d.get("mesh", {})),
             scheduler=SchedulerSpec(**d.get("scheduler", {})),
             cascade=CascadeSpec(**d.get("cascade", {})),
+            obs=ObsSpec(**obs),
         )
 
     def to_json(self, *, indent: int | None = 1) -> str:
