@@ -17,12 +17,22 @@ BENCH_kernels.json schema::
      "entries": [
        {"kernel": "acam_match",    # | acam_similarity | *_classify_fused
                                    # | acam_device_classify (RRAM physics)
+                                   # | acam_match_serve /
+                                   #   acam_similarity_serve (the resident
+                                   #   serving mega-kernel; ref_us = the
+                                   #   pre-megakernel compose path, so
+                                   #   speedup IS the fusion win)
+                                   # | acam_similarity_classify_chunked
+                                   #   (big-bank single-dispatch similarity;
+                                   #   ref_us = jnp oracle)
                                    # | acam_match_classify_sharded
                                    #   (bank rows sharded over the model
                                    #   axis; ref_us = replicated engine,
                                    #   kernel_us = sharded engine, extra
-                                   #   "bank_sharding" field — rows appear
-                                   #   only under REPRO_FORCE_MESH)
+                                   #   "bank_sharding" + "reduce" fields —
+                                   #   the cross-shard reduce strategy the
+                                   #   plan selected; rows appear only
+                                   #   under REPRO_FORCE_MESH)
         "b": 256, "m": 10, "n": 784,
         "ref_us": 123.4,           # jnp reference, us/call
         "kernel_us": 456.7,        # timed engine backend (pallas kernels,
@@ -36,8 +46,11 @@ kernels directly against their jnp oracles (kernel micro-benchmarks); the
 ``*_classify*`` rows go through `repro.match.MatchEngine` — the exact path
 production callers execute.
 
-``--tune`` grid-searches kernel block sizes first (repro.kernels.tuning,
-persistent cache); ``--smoke`` restricts to B in {1, 256} for CI.
+``--tune`` grid-searches kernel block sizes first (repro.kernels.tuning —
+the winners persist to the v2 JSON cache keyed by
+``kernel|platform[+interp]|shape|dtype``, so interpreted and compiled
+timings never cross-contaminate); ``--smoke`` restricts to B in {1, 256}
+for CI.
 
 `run()` keeps the harness contract used by benchmarks/run.py: a list of
 ``{"name", "us_per_call", "derived"}`` rows.
@@ -149,6 +162,71 @@ def compare_kernels(batches=BENCH_SHAPES, *, iters=10) -> list[dict]:
     return entries
 
 
+def serve_entries(batches=BENCH_SHAPES, *, iters: int = 10) -> list[dict]:
+    """Mega-kernel vs compose rows for the multi-tenant serve path.
+
+    Times `MatchEngine.classify_serve` (the scheduler tick's dispatch) with
+    ``serve_fusion="mega"`` (ONE resident pallas_call) against
+    ``serve_fusion="compose"`` (jnp gather/shift + fused margins kernel +
+    jnp tau compare) — same kernel backend both sides, so the speedup
+    column IS the fusion win. Plus the big-bank chunked-similarity row
+    against its jnp oracle (the coverage the similarity method gained)."""
+    from repro import match
+    from repro.core import templates as T
+
+    key = jax.random.PRNGKey(2)
+    n_slots = 8
+    tmpl = (jax.random.uniform(key, (M, 1, N)) > 0.5).astype(jnp.float32)
+    bank = T.TemplateBank(
+        templates=tmpl, lower=jnp.zeros_like(tmpl),
+        upper=(jax.random.uniform(jax.random.fold_in(key, 1), (M, 1, N))
+               > 0.3).astype(jnp.float32),
+        valid=jnp.ones((M, 1), bool), thresholds=jnp.zeros((N,)))
+    thr_table = jax.random.normal(jax.random.fold_in(key, 2),
+                                  (n_slots, N)) * 0.1
+
+    entries = []
+    for b in batches:
+        f = jax.random.normal(jax.random.fold_in(key, b), (b, N))
+        slot = jnp.asarray(
+            jax.random.randint(jax.random.fold_in(key, b + 1), (b,), 0,
+                               n_slots), jnp.int32)
+        tau = jnp.full((b,), 2.0, jnp.float32)
+        it = max(3, iters // 4) if b >= 4096 else iters
+        for method, name in (("feature_count", "acam_match_serve"),
+                             ("similarity", "acam_similarity_serve")):
+            mega = match.engine_from_config(match.EngineConfig(
+                method=method, backend="kernel", serve_fusion="mega"))
+            comp = match.engine_from_config(match.EngineConfig(
+                method=method, backend="kernel", serve_fusion="compose"))
+            comp_us = _time(jax.jit(lambda x, s, t, e=comp: e.classify_serve(
+                x, thr_table, s, bank, tau=t)), f, slot, tau, iters=it)
+            mega_us = _time(jax.jit(lambda x, s, t, e=mega: e.classify_serve(
+                x, thr_table, s, bank, tau=t)), f, slot, tau, iters=it)
+            entries.append(_compare_entry(name, b, M, N, comp_us, mega_us))
+
+    # big-bank chunked similarity: C=1100, K=2 exceeds the fused budget
+    c_big, k_big = 1100, 2
+    big = (jax.random.uniform(jax.random.fold_in(key, 9),
+                              (c_big, k_big, N)) > 0.5).astype(jnp.float32)
+    big_bank = T.TemplateBank(
+        templates=big, lower=jnp.zeros_like(big), upper=jnp.ones_like(big),
+        valid=jnp.ones((c_big, k_big), bool), thresholds=jnp.zeros((N,)))
+    eng_ref = match.engine_from_config(match.EngineConfig(
+        method="similarity", backend="reference"))
+    eng_ker = match.engine_from_config(match.EngineConfig(
+        method="similarity", backend="kernel"))
+    for b in batches[:2]:  # the big bank at B=4096 is a minutes-long cell
+        f = jax.random.normal(jax.random.fold_in(key, 20 + b), (b, N))
+        ref_us = _time(jax.jit(lambda x: eng_ref.classify_features_margin(
+            x, big_bank)), f, iters=max(3, iters // 2))
+        ker_us = _time(jax.jit(lambda x: eng_ker.classify_features_margin(
+            x, big_bank)), f, iters=max(3, iters // 2))
+        entries.append(_compare_entry("acam_similarity_classify_chunked", b,
+                                      c_big * k_big, N, ref_us, ker_us))
+    return entries
+
+
 def sharded_classify_entries(batches=BENCH_SHAPES, *, classes: int = 512,
                              iters: int = 10) -> list[dict]:
     """Replicated-vs-bank-sharded classify rows (the model-axis story).
@@ -204,6 +282,7 @@ def sharded_classify_entries(batches=BENCH_SHAPES, *, classes: int = 512,
         e = _compare_entry("acam_match_classify_sharded", b, classes, N,
                            rep_us, sharded_us)
         e["bank_sharding"] = shards
+        e["reduce"] = plan.reduce  # cross-shard strategy the plan selected
         entries.append(e)
     context.clear()
     return entries
@@ -231,6 +310,7 @@ def run() -> list[dict]:
 
     shapes = SMOKE_SHAPES if fast else BENCH_SHAPES
     entries = compare_kernels(shapes)
+    entries += serve_entries(shapes)
     entries += sharded_classify_entries(shapes)  # no-op without forced mesh
     write_bench_json(entries)
     for e in entries:

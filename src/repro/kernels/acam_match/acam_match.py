@@ -50,6 +50,19 @@ Three entry points:
                            fused-row budget (`repro.match.MAX_FUSED_ROWS`)
                            stay a SINGLE pallas_call instead of falling back
                            to the two-stage kernel + jnp margin epilogue.
+  `acam_match_serve`    -> the resident serving mega-kernel: the whole
+                           multi-tenant scheduler tick in ONE pallas_call.
+                           On top of the chunked margins pipeline it folds
+                           the per-slot tenant *threshold-row gather* (a
+                           one-hot MXU select from the (T, N) thresholds
+                           table — exact under HIGHEST precision) and the
+                           cascade's escalation mask (margin < tau) into the
+                           kernel, so the tick's super-bank path never
+                           leaves VMEM and never runs a jnp epilogue. The
+                           class chunk degenerates to the full padded class
+                           count for banks inside the fused-row budget, so
+                           one kernel covers both resident and chunked
+                           regimes.
 
 `repro.core.matching` dispatches to these by default (see its docstring for
 the backend-selection API); the jnp references remain as oracles.
@@ -430,3 +443,164 @@ def acam_match_classify_margins_chunked(
         interpret=interpret,
     )(f, thr, t, valid_kcp, lo, hi)
     return pred[:b, 0], per_class[:b, :num_classes], margin[:b, 0]
+
+
+def _serve_kernel(f_ref, slot_ref, thr_ref, t_ref, v_ref, lo_ref, hi_ref,
+                  tau_ref, acc_ref, pc_ref, pred_ref, margin_ref, esc_ref, *,
+                  nj: int, nk: int, n_true: int, num_k: int, cc: int):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # per-slot tenant threshold row, gathered IN the kernel: a one-hot MXU
+    # select from the resident (T_pad, bk) thresholds-table block. Exact:
+    # each output element sums exactly one table entry (1.0 * thr) plus
+    # zeros, and HIGHEST precision keeps the f32 values unrounded — so
+    # (f - thr) > 0 below reproduces the jnp take-then-shift composition
+    # bit for bit.
+    slot = slot_ref[..., :1]  # (bm, 1) payload column
+    t_pad = thr_ref.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (slot.shape[0], t_pad), 1)
+    onehot = (iota == slot).astype(jnp.float32)
+    thr = jax.lax.dot_general(
+        onehot, thr_ref[...], (((1,), (0,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32)
+    # per-tenant thresholds -> shared zero threshold (the scheduler's shift
+    # trick, now in VMEM): binarize(f, thr_t) == (f - thr_t) > 0
+    q_pm = jnp.where(f_ref[...] - thr > 0, 1.0, -1.0).astype(jnp.bfloat16)
+    t = t_ref[...].reshape(num_k * cc, t_ref.shape[-1])
+    t_pm = (2.0 * t - 1.0).astype(jnp.bfloat16)
+    acc_ref[...] += jax.lax.dot_general(
+        q_pm, t_pm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _chunk_epilogue():
+        from repro.kernels.layout import windowed_margin
+
+        np_ = float(nk * f_ref.shape[-1])
+        scores = (np_ + acc_ref[...]) * 0.5 - (np_ - n_true)
+        vrow = v_ref[...].reshape(1, num_k * cc)
+        s = jnp.where(vrow > 0, scores, -jnp.inf)
+        chunk_pc = s[:, :cc]
+        for kk in range(1, num_k):
+            chunk_pc = jnp.maximum(chunk_pc, s[:, kk * cc:(kk + 1) * cc])
+        prev = jnp.where(j == 0,
+                         jnp.full(pc_ref.shape, -jnp.inf, pc_ref.dtype),
+                         pc_ref[...])
+        pc = jax.lax.dynamic_update_slice(prev, chunk_pc, (0, j * cc))
+        pc_ref[...] = pc
+
+        @pl.when(j == nj - 1)
+        def _final():
+            pred, margin = windowed_margin(pc, lo_ref[..., :1],
+                                           hi_ref[..., :1], float(n_true))
+            # the cascade's escalation mask: strictly below tau asks for the
+            # CNN head; padding rows carry tau = -inf (never escalate)
+            esc = (margin < tau_ref[..., 0]).astype(jnp.int32)
+            pred_ref[...] = jnp.broadcast_to(pred[:, None], pred_ref.shape)
+            margin_ref[...] = jnp.broadcast_to(margin[:, None],
+                                               margin_ref.shape)
+            esc_ref[...] = jnp.broadcast_to(esc[:, None], esc_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "chunk", "block",
+                                             "interpret"))
+def acam_match_serve(
+        features: jax.Array, thr_table: jax.Array, tenant_slot: jax.Array,
+        templates_kcp: jax.Array, valid_kcp: jax.Array,
+        class_lo: jax.Array, class_hi: jax.Array, tau: jax.Array,
+        num_classes: int, *, chunk: int, block=DEFAULT_BLOCK,
+        interpret: bool = False
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """The resident serving mega-kernel: gather -> binarize -> match ->
+    per-class max -> WTA -> windowed Eq. 12 margin -> escalation mask, ONE
+    pallas_call over the multi-tenant super-bank.
+
+    features:    (B, N) raw per-slot front-end feature maps (UNshifted)
+    thr_table:   (T, N) per-tenant binarisation threshold rows
+    tenant_slot: (B,) int32 — each row's tenant slot in ``thr_table``
+    templates_kcp/valid_kcp: (K, Cp, N) / (K, Cp) super-bank stack
+                 (`repro.kernels.layout.stack_kcp`)
+    class_lo/class_hi: (B,) int32 tenant class windows (global indices)
+    tau:         (B,) f32 cascade threshold; escalate = margin < tau
+    chunk:       class columns per grid tile (`layout.class_chunk`) — equal
+                 to Cp for banks inside the fused-row budget (nj == 1, the
+                 fully resident case)
+
+    Returns (pred (B,) int32 global class index, per_class (B, C) f32,
+    margin (B,) f32, escalate (B,) bool). Rows with empty windows (slot
+    padding) get pred 0 / margin 0, and padding rows ride tau = -inf so
+    they never escalate.
+    """
+    b, n = features.shape
+    num_k, cp, _ = templates_kcp.shape
+    assert cp % chunk == 0, "chunk must divide the padded class count"
+    t_rows = thr_table.shape[0]
+    t_pad = -(-t_rows // 8) * 8  # sublane-align the thresholds table
+    bm, _, bk = block
+    bp, np_ = (-(-b // bm) * bm, -(-n // bk) * bk)
+
+    # features pad with -inf (not 0): q = (f - thr) > 0 must binarise padded
+    # columns to -1 for ANY thr, matching the 0-padded template bits; the
+    # thresholds table itself pads with zeros so the one-hot select stays
+    # finite (0 * inf would poison the MXU sum with NaN).
+    f = jnp.pad(features, ((0, bp - b), (0, np_ - n)),
+                constant_values=-jnp.inf)
+    thr = jnp.pad(thr_table.astype(jnp.float32),
+                  ((0, t_pad - t_rows), (0, np_ - n)))
+    t = jnp.pad(templates_kcp, ((0, 0), (0, 0), (0, np_ - n)))
+    # scalar per-row operands ride lane-aligned (B, PRED_LANES) carriers
+    slot = jnp.broadcast_to(
+        jnp.pad(tenant_slot.astype(jnp.int32), (0, bp - b))[:, None],
+        (bp, PRED_LANES))
+    lo = jnp.broadcast_to(
+        jnp.pad(class_lo.astype(jnp.int32), (0, bp - b))[:, None],
+        (bp, PRED_LANES))
+    hi = jnp.broadcast_to(
+        jnp.pad(class_hi.astype(jnp.int32), (0, bp - b))[:, None],
+        (bp, PRED_LANES))
+    tau_c = jnp.broadcast_to(
+        jnp.pad(tau.astype(jnp.float32), (0, bp - b),
+                constant_values=-jnp.inf)[:, None],
+        (bp, PRED_LANES))
+
+    nj = cp // chunk
+    nk = np_ // bk
+    grid = (bp // bm, nj, nk)
+    _, per_class, pred, margin, esc = pl.pallas_call(
+        functools.partial(_serve_kernel, nj=nj, nk=nk, n_true=n,
+                          num_k=num_k, cc=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((t_pad, bk), lambda i, j, k: (0, k)),
+            pl.BlockSpec((num_k, chunk, bk), lambda i, j, k: (0, j, k)),
+            pl.BlockSpec((num_k, chunk), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, num_k * chunk), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, cp), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, num_k * cp), jnp.float32),
+            jax.ShapeDtypeStruct((bp, cp), jnp.float32),  # running per-class
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.int32),  # WTA index
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.float32),  # margin
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.int32),  # escalate
+        ],
+        interpret=interpret,
+    )(f, slot, thr, t, valid_kcp, lo, hi, tau_c)
+    return (pred[:b, 0], per_class[:b, :num_classes], margin[:b, 0],
+            esc[:b, 0].astype(bool))

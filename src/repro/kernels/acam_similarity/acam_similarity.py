@@ -26,6 +26,15 @@ fallback. Two entry points:
                                 pallas_call over a K-major template layout
                                 (`repro.kernels.layout`); no (B, M) score
                                 round-trip.
+  `acam_similarity_serve`    -> the symmetric serving/margins kernel: the
+                                (K, Cp, N) class-chunked scheme of
+                                `acam_match_serve` for the similarity
+                                method — per-slot tenant threshold gather,
+                                binarize, Eq. 9-11 window match with D/H
+                                chunk accumulators, running per-class max,
+                                windowed Eq. 12 margin and the escalation
+                                mask, ONE pallas_call at any bank size (the
+                                chunk degenerates to Cp for resident banks).
 
 `repro.core.matching` dispatches here by default; the jnp reference stays
 as the oracle.
@@ -209,3 +218,161 @@ def acam_similarity_classify(features: jax.Array, thresholds: jax.Array,
         interpret=interpret,
     )(f, thr, lo, hi, vrow)
     return pred[:b, 0], per_class[:b, :num_classes]
+
+
+def _serve_kernel(f_ref, slot_ref, thr_ref, lo_ref, hi_ref, v_ref, wlo_ref,
+                  whi_ref, tau_ref, d_ref, h_ref, pc_ref, pred_ref,
+                  margin_ref, esc_ref, *, nj: int, nk: int, alpha: float,
+                  n_true: int, num_k: int, cc: int):
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        d_ref[...] = jnp.zeros_like(d_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    # per-slot tenant threshold row: one-hot MXU select from the resident
+    # (T_pad, bk) thresholds-table block (exact — see acam_match._serve_kernel)
+    slot = slot_ref[..., :1]
+    t_pad = thr_ref.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (slot.shape[0], t_pad), 1)
+    onehot = (iota == slot).astype(jnp.float32)
+    thr = jax.lax.dot_general(
+        onehot, thr_ref[...], (((1,), (0,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32)
+    # binarize against the gathered row; padded feature columns carry
+    # f = -inf so q = 0 there, matching the zero-padded windows (counted as
+    # hits, corrected in the chunk epilogue)
+    q = jnp.where(f_ref[...] - thr > 0, 1.0, 0.0)[:, None, :]
+    lo = lo_ref[...].reshape(num_k * cc, lo_ref.shape[-1])[None, :, :]
+    hi = hi_ref[...].reshape(num_k * cc, hi_ref.shape[-1])[None, :, :]
+
+    above = jnp.maximum(q - hi, 0.0)
+    below = jnp.maximum(lo - q, 0.0)
+    d_ref[...] += jnp.sum(above * above + below * below, axis=-1)
+    hit = jnp.logical_and(q >= lo, q <= hi)
+    h_ref[...] += jnp.sum(hit.astype(jnp.float32), axis=-1)
+
+    @pl.when(k == nk - 1)
+    def _chunk_epilogue():
+        from repro.kernels.layout import windowed_margin
+
+        pad_hits = float(nk * f_ref.shape[-1] - n_true)
+        h = (h_ref[...] - pad_hits) / float(n_true)
+        s = h / (1.0 + alpha * d_ref[...])
+        vrow = v_ref[...].reshape(1, num_k * cc)
+        s = jnp.where(vrow > 0, s, -jnp.inf)
+        chunk_pc = s[:, :cc]
+        for kk in range(1, num_k):
+            chunk_pc = jnp.maximum(chunk_pc, s[:, kk * cc:(kk + 1) * cc])
+        prev = jnp.where(j == 0,
+                         jnp.full(pc_ref.shape, -jnp.inf, pc_ref.dtype),
+                         pc_ref[...])
+        pc = jax.lax.dynamic_update_slice(prev, chunk_pc, (0, j * cc))
+        pc_ref[...] = pc
+
+        @pl.when(j == nj - 1)
+        def _final():
+            pred, margin = windowed_margin(pc, wlo_ref[..., :1],
+                                           whi_ref[..., :1], 1.0)
+            esc = (margin < tau_ref[..., 0]).astype(jnp.int32)
+            pred_ref[...] = jnp.broadcast_to(pred[:, None], pred_ref.shape)
+            margin_ref[...] = jnp.broadcast_to(margin[:, None],
+                                               margin_ref.shape)
+            esc_ref[...] = jnp.broadcast_to(esc[:, None], esc_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "alpha", "chunk",
+                                             "block", "interpret"))
+def acam_similarity_serve(
+        features: jax.Array, thr_table: jax.Array, tenant_slot: jax.Array,
+        lower_kcp: jax.Array, upper_kcp: jax.Array, valid_kcp: jax.Array,
+        class_lo: jax.Array, class_hi: jax.Array, tau: jax.Array,
+        num_classes: int, *, alpha: float = 1.0, chunk: int,
+        block=DEFAULT_BLOCK, interpret: bool = False
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Serving mega-kernel for the similarity method: gather -> binarize ->
+    Eq. 9-11 window match -> per-class max -> windowed Eq. 12 margin ->
+    escalation mask, ONE pallas_call at any bank size.
+
+    Operand contract mirrors `acam_match.acam_match_serve`, with the bank as
+    (K, Cp, N) lower/upper window stacks (`repro.kernels.layout.stack_kcp`).
+    Margins are in Eq. 11 score units (cap 1.0). ``chunk`` class columns of
+    all K window rows are VMEM-resident per grid step; D and H accumulate
+    per chunk and the running per-class max crosses chunks in a revisited
+    (bm, Cp) block. Returns (pred, per_class, margin, escalate).
+    """
+    b, n = features.shape
+    num_k, cp, _ = lower_kcp.shape
+    assert cp % chunk == 0, "chunk must divide the padded class count"
+    t_rows = thr_table.shape[0]
+    t_pad = -(-t_rows // 8) * 8
+    bm, _, bk = block
+    # the window compare broadcasts a (bm, K * chunk, bk) tile: shrink the
+    # query rows per step if that would bust the VMEM budget
+    while bm > 8 and bm * num_k * chunk * bk * 4 > 8 * 1024 * 1024:
+        bm //= 2
+    bp, np_ = (-(-b // bm) * bm, -(-n // bk) * bk)
+
+    f = jnp.pad(features.astype(jnp.float32), ((0, bp - b), (0, np_ - n)),
+                constant_values=-jnp.inf)
+    thr = jnp.pad(thr_table.astype(jnp.float32),
+                  ((0, t_pad - t_rows), (0, np_ - n)))
+    lo = jnp.pad(lower_kcp.astype(jnp.float32), ((0, 0), (0, 0),
+                                                 (0, np_ - n)))
+    hi = jnp.pad(upper_kcp.astype(jnp.float32), ((0, 0), (0, 0),
+                                                 (0, np_ - n)))
+    slot = jnp.broadcast_to(
+        jnp.pad(tenant_slot.astype(jnp.int32), (0, bp - b))[:, None],
+        (bp, PRED_LANES))
+    wlo = jnp.broadcast_to(
+        jnp.pad(class_lo.astype(jnp.int32), (0, bp - b))[:, None],
+        (bp, PRED_LANES))
+    whi = jnp.broadcast_to(
+        jnp.pad(class_hi.astype(jnp.int32), (0, bp - b))[:, None],
+        (bp, PRED_LANES))
+    tau_c = jnp.broadcast_to(
+        jnp.pad(tau.astype(jnp.float32), (0, bp - b),
+                constant_values=-jnp.inf)[:, None],
+        (bp, PRED_LANES))
+
+    nj = cp // chunk
+    nk = np_ // bk
+    grid = (bp // bm, nj, nk)
+    _, _, per_class, pred, margin, esc = pl.pallas_call(
+        functools.partial(_serve_kernel, nj=nj, nk=nk, alpha=alpha,
+                          n_true=n, num_k=num_k, cc=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((t_pad, bk), lambda i, j, k: (0, k)),
+            pl.BlockSpec((num_k, chunk, bk), lambda i, j, k: (0, j, k)),
+            pl.BlockSpec((num_k, chunk, bk), lambda i, j, k: (0, j, k)),
+            pl.BlockSpec((num_k, chunk), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, num_k * chunk), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, num_k * chunk), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, cp), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, PRED_LANES), lambda i, j, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, num_k * cp), jnp.float32),  # D
+            jax.ShapeDtypeStruct((bp, num_k * cp), jnp.float32),  # H
+            jax.ShapeDtypeStruct((bp, cp), jnp.float32),  # running per-class
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.int32),  # WTA index
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.float32),  # margin
+            jax.ShapeDtypeStruct((bp, PRED_LANES), jnp.int32),  # escalate
+        ],
+        interpret=interpret,
+    )(f, slot, thr, lo, hi, valid_kcp, wlo, whi, tau_c)
+    return (pred[:b, 0], per_class[:b, :num_classes], margin[:b, 0],
+            esc[:b, 0].astype(bool))

@@ -2,7 +2,12 @@
 
 `similarity_scores` runs the two-stage Pallas kernel; `classify` adds the
 Eq. 12 epilogue in jnp; `classify_fused` is the single-pallas_call
-binarize->window-match->WTA path over a K-major bank layout.
+binarize->window-match->WTA path over a K-major bank layout;
+`classify_fused_margins` is the margins variant (class-chunked past
+``max_rows``, so any bank size stays ONE pallas_call); `serve_classify` is
+the multi-tenant serving mega-kernel (per-slot threshold gather + margins +
+escalation mask in VMEM) — the similarity twin of
+`repro.kernels.acam_match.ops.serve_classify`.
 
 Blocks resolve through `repro.kernels.tuning.get_block` (persistent JSON
 cache, `DEFAULT_BLOCK` fallback) when ``block`` is omitted — a pure lookup,
@@ -17,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.kernels import layout, tuning
 from repro.kernels.acam_similarity.acam_similarity import (
-    DEFAULT_BLOCK, acam_similarity, acam_similarity_classify)
+    DEFAULT_BLOCK, acam_similarity, acam_similarity_classify,
+    acam_similarity_serve)
 
 
 _on_cpu = tuning.interpret_mode
@@ -66,3 +72,61 @@ def classify_fused(features: jax.Array, thresholds: jax.Array,
     return acam_similarity_classify(features, thresholds, lo_km, hi_km, v_km,
                                     c, alpha=alpha, block=block,
                                     interpret=_on_cpu())
+
+
+def serve_classify(
+        features: jax.Array, thr_table: jax.Array, tenant_slot: jax.Array,
+        lower_ck: jax.Array, upper_ck: jax.Array, valid_ck: jax.Array,
+        class_lo: jax.Array | None = None,
+        class_hi: jax.Array | None = None, tau: jax.Array | None = None, *,
+        alpha: float = 1.0, max_rows: int, block=None
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Multi-tenant serving mega-kernel over a (C, K, N) window bank.
+
+    Same contract as `repro.kernels.acam_match.ops.serve_classify` with
+    Eq. 9-11 scoring: ONE pallas_call from raw features + the (T, N)
+    thresholds table to (pred, per_class, margin, escalate), class-chunked
+    past ``max_rows`` template rows. ``tau`` defaults to -inf.
+    """
+    c, k, n = lower_ck.shape
+    b = features.shape[0]
+    if class_lo is None:
+        class_lo = jnp.zeros((b,), jnp.int32)
+    if class_hi is None:
+        class_hi = jnp.full((b,), c, jnp.int32)
+    if tau is None:
+        tau = jnp.full((b,), -jnp.inf, jnp.float32)
+    # never tile past the data (see tuning.clamp_block): bit-safe, and the
+    # serving tick's B = slots / small-N regime is exactly where it pays
+    block = tuning.clamp_block(_resolve(features, c * k, block), b, n)
+    cp = layout.padded_classes(c)
+    chunk = layout.class_chunk(cp, k, max_rows)
+    lo_kcp = layout.stack_kcp(lower_ck, c)
+    hi_kcp = layout.stack_kcp(upper_ck, c)
+    v_kcp = layout.valid_kcp(valid_ck, c)
+    return acam_similarity_serve(features, thr_table, tenant_slot, lo_kcp,
+                                 hi_kcp, v_kcp, class_lo, class_hi, tau, c,
+                                 alpha=alpha, chunk=chunk, block=block,
+                                 interpret=_on_cpu())
+
+
+def classify_fused_margins(
+        features: jax.Array, thresholds: jax.Array, lower_ck: jax.Array,
+        upper_ck: jax.Array, valid_ck: jax.Array,
+        class_lo: jax.Array | None = None,
+        class_hi: jax.Array | None = None, *, alpha: float = 1.0,
+        max_rows: int, block=None
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-pallas_call Eq. 9-12 + windowed margin (any bank size).
+
+    The single-tenant face of the serve kernel: ONE shared thresholds row
+    (T = 1, every query binarises against it) and tau pinned to -inf, with
+    the escalation mask dropped. Returns (pred, per_class, margin) — the
+    similarity twin of `acam_match.ops.classify_fused_margins[_chunked]`.
+    """
+    b = features.shape[0]
+    pred, per_class, margin, _ = serve_classify(
+        features, thresholds[None, :], jnp.zeros((b,), jnp.int32), lower_ck,
+        upper_ck, valid_ck, class_lo, class_hi, None, alpha=alpha,
+        max_rows=max_rows, block=block)
+    return pred, per_class, margin

@@ -17,14 +17,22 @@ Cache file
 ----------
 ``$REPRO_TUNING_CACHE`` if set, else ``~/.cache/repro/pallas_blocks.json``:
 
-    {"version": 1,
-     "entries": {"acam_match|cpu|b256_m10_n784|float32":
+    {"version": 2,
+     "entries": {"acam_match|cpu+interp|b256_m10_n784|float32":
                  {"block": [128, 128, 512], "us": 83.1}}}
 
 Keys are exact-shape (no bucketing): the ACAM deployment shapes are few and
 static (the bank is programmed once), so exact keys stay small and never
-mis-tune. Writes are atomic (tmp + rename) so concurrent benchmark runs
-cannot corrupt the cache.
+mis-tune. The platform token grows a ``+interp`` suffix when the kernels
+run under the Pallas interpreter (CPU): interpreted timings favour very
+different blocks than compiled ones, and v1's bare-platform keys let a
+cache tuned in interpret mode poison a compiled run on the same platform
+string. v2 keys separate the two populations; v1 caches are discarded on
+load (version gate), so stale keys can never be consulted. Writes are
+atomic (tmp + rename) so concurrent benchmark runs cannot corrupt the
+cache. Tune offline with ``python -m repro.kernels.tuning`` or
+``python benchmarks/kernel_bench.py --tune`` (grid-searches every
+benchmarked shape and persists the winners here).
 
 Candidate grids
 ---------------
@@ -49,7 +57,7 @@ import jax
 Block = tuple[int, int, int]
 
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024
-CACHE_VERSION = 1
+CACHE_VERSION = 2
 
 
 def cache_path() -> str:
@@ -77,6 +85,21 @@ def resolve_block(kernel: str, operand: jax.Array, m: int, block):
     return get_block(kernel, (b, m, n), operand.dtype)
 
 
+def clamp_block(block, b: int, n: int) -> tuple[int, int, int]:
+    """Cap ``(bm, bn, bk)`` to the data: bm to the sublane-padded batch, bk
+    to the lane-padded feature width.
+
+    Tiling past the operand only adds padding work — padded batch rows are
+    row-independent and padded feature columns contribute exact zeros (or
+    exactly-corrected constants, recomputed by each wrapper from its own
+    padded width) — so the cap is bit-safe and a pure win in the serving
+    tick's small regime (B = scheduler slots, N = 64-ish front-end maps),
+    where the default (128, ., 512) tile would 4-8x every block op.
+    """
+    bm, bn, bk = block
+    return (min(bm, -(-b // 8) * 8), bn, min(bk, -(-n // 128) * 128))
+
+
 def shape_key(b: int, m: int, n: int) -> str:
     return f"b{b}_m{m}_n{n}"
 
@@ -85,7 +108,9 @@ def entry_key(kernel: str, shape: tuple[int, int, int], dtype,
               device: str | None = None) -> str:
     b, m, n = shape
     dt = jax.numpy.dtype(dtype).name
-    return f"{kernel}|{device or backend()}|{shape_key(b, m, n)}|{dt}"
+    if device is None:
+        device = backend() + ("+interp" if interpret_mode() else "")
+    return f"{kernel}|{device}|{shape_key(b, m, n)}|{dt}"
 
 
 # ---------------------------------------------------------------------------

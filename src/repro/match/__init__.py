@@ -14,34 +14,39 @@ Layering (plan x backends x callers):
               cross-shard (max, argmax) reduce keeps decisions/margins
               bit-identical to replicated execution
                  |
-    backends  reference (jnp oracles) | kernel (Pallas fused/two-stage +
-              autotuner) | device (repro.core.acam RRAM-CMOS physics)
+    backends  reference (jnp oracles) | kernel (single-dispatch Pallas at
+              any bank size + the serving mega-kernel + autotuner) | device
+              (repro.core.acam RRAM-CMOS physics)
 
 See `repro.match.engine`, `repro.match.plan` and `repro.match.backends`
 for the contracts.
 """
 from repro.match.backends import (MAX_FUSED_ROWS, TINY_ELEMENTS,
-                                  DeviceBackend, KernelBackend, MatchBackend,
+                                  TINY_ELEMENTS_SIMILARITY, DeviceBackend,
+                                  KernelBackend, MatchBackend,
                                   ReferenceBackend, backend_for,
                                   backend_names, classify_scores,
                                   feature_count_scores_ref, register_backend,
                                   shard_window_top2, similarity_scores_ref,
-                                  window_margin, winner_take_all)
+                                  tiny_cutoff, window_margin, winner_take_all)
 from repro.match.config import EngineConfig
 from repro.match.engine import (MatchEngine, bank_specs, batch_specs,
                                 default_backend, dp_axes_in_mesh, engine_for,
                                 engine_from_config, set_default_backend,
                                 use_backend)
-from repro.match.plan import (REPLICATED, PartitionPlan, bank_shards_in_mesh,
-                              plan_for)
+from repro.match.plan import (REPLICATED, TREE_REDUCE_MIN_SHARDS,
+                              PartitionPlan, bank_shards_in_mesh, plan_for,
+                              reduce_strategy)
 
 __all__ = [
-    "MAX_FUSED_ROWS", "TINY_ELEMENTS", "DeviceBackend", "KernelBackend",
-    "MatchBackend", "ReferenceBackend", "backend_for", "backend_names",
-    "classify_scores", "feature_count_scores_ref", "register_backend",
-    "shard_window_top2", "similarity_scores_ref", "window_margin",
+    "MAX_FUSED_ROWS", "TINY_ELEMENTS", "TINY_ELEMENTS_SIMILARITY",
+    "DeviceBackend", "KernelBackend", "MatchBackend", "ReferenceBackend",
+    "backend_for", "backend_names", "classify_scores",
+    "feature_count_scores_ref", "register_backend", "shard_window_top2",
+    "similarity_scores_ref", "tiny_cutoff", "window_margin",
     "winner_take_all", "EngineConfig", "MatchEngine", "bank_specs",
     "batch_specs", "default_backend", "dp_axes_in_mesh", "engine_for",
     "engine_from_config", "set_default_backend", "use_backend", "REPLICATED",
-    "PartitionPlan", "bank_shards_in_mesh", "plan_for",
+    "TREE_REDUCE_MIN_SHARDS", "PartitionPlan", "bank_shards_in_mesh",
+    "plan_for", "reduce_strategy",
 ]

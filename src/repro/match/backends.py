@@ -1,6 +1,6 @@
 """Matching backends: the three first-class implementations of Eq. 8-12.
 
-Every backend implements the same five entry points over a
+Every backend implements the same entry points over a
 `TemplateBank` (or raw template arrays):
 
   feature_count_scores(queries, templates, valid)            -> (B, C, K)
@@ -8,6 +8,8 @@ Every backend implements the same five entry points over a
   classify(queries, bank)              binary queries        -> (pred, per_class)
   classify_features(features, bank)    raw features          -> (pred, per_class)
   classify_features_margin(features, bank, lo, hi)           -> (pred, per_class, margin)
+  classify_serve(features, thr_table, slot, bank, lo, hi, tau)
+                                       multi-tenant tick     -> (pred, per_class, margin, escalate)
 
 Backends:
 
@@ -15,10 +17,15 @@ Backends:
              fast path (XLA fuses them well below the kernels' padding/
              launch overhead).
   kernel     the Pallas paths: fused binarize->match->valid-mask->per-class
-             max->WTA [+windowed margins] single pallas_call when the bank
-             fits VMEM (`MAX_FUSED_ROWS`), two-stage kernel + jnp epilogue
-             otherwise. Blocks resolve through the `repro.kernels.tuning`
-             autotuner unless the engine config pins them.
+             max->WTA [+windowed margins] in ONE pallas_call for both
+             methods at ANY bank size — banks inside `MAX_FUSED_ROWS` keep
+             every template row VMEM-resident, bigger banks walk the class
+             dimension in chunks (same single dispatch, running per-class
+             max in a revisited block). The serve path adds the per-slot
+             threshold gather and escalation mask in-kernel
+             (`acam_match_serve` / `acam_similarity_serve`). Blocks resolve
+             through the `repro.kernels.tuning` autotuner unless the engine
+             config pins them.
   device     the RRAM-CMOS physics models from `repro.core.acam` (§III):
              the bank is programmed into a (C*K)-row TXL array (point
              templates become lower == upper windows), optionally with
@@ -53,11 +60,26 @@ Array = jax.Array
 NEG = -jnp.inf
 
 #: below this many (B * C * K * N) cell-match operations the jnp reference
-#: beats the kernel's padding/launch overhead — "auto" stays on XLA.
+#: beats the kernel's padding/launch overhead — "auto" stays on XLA. This
+#: is the feature-count crossover; the similarity kernel does ~16x less
+#: useful work per microsecond (BENCH_kernels.json: 584 vs 40.5
+#: cell-matches/us at B=256), so its crossover sits ~16x later.
 TINY_ELEMENTS = 32768
 
+#: the similarity method's crossover: TINY_ELEMENTS * 16 (measured ratio of
+#: kernel cell-matches/us between the two methods).
+TINY_ELEMENTS_SIMILARITY = 524288
+
+
+def tiny_cutoff(method: str) -> int:
+    """Per-method "auto" dispatch cutoff in B * C * K * N cell matches."""
+    return TINY_ELEMENTS_SIMILARITY if method == "similarity" \
+        else TINY_ELEMENTS
+
+
 #: fused classify keeps all K * Cp template rows VMEM-resident; past this
-#: row count the kernel backend falls back to the two-stage path.
+#: row count the kernel backend walks the bank in class-column chunks
+#: (still a single pallas_call — `layout.class_chunk`).
 MAX_FUSED_ROWS = 2048
 
 
@@ -231,6 +253,38 @@ class MatchBackend:
                                      cap=self.margin_cap(features.shape[-1]))
         return pred, per_class, margin
 
+    # -- multi-tenant serve path (the scheduler tick) ------------------------
+    #
+    # One micro-batch of per-slot raw features, each row binarising against
+    # ITS tenant's threshold row of a stacked (T, N) table, matched over the
+    # shared super-bank (whose own thresholds are zeros — the registry packs
+    # tenants that way), inside per-row class windows, with the cascade's
+    # escalation compare folded in. The default composes existing pieces
+    # (gather + the shift identity binarize(f, thr_t) == binarize(f - thr_t,
+    # 0) + classify_features_margin + margin < tau); the kernel backend
+    # overrides it with the resident mega-kernel.
+
+    def classify_serve(
+        self, features: Array, thr_table: Array, tenant_slot: Array,
+        bank: TemplateBank, class_lo: Array, class_hi: Array, tau: Array,
+    ) -> tuple[Array, Array, Array, Array]:
+        """-> (pred, per_class, margin, escalate (B,) bool)."""
+        thr_rows = jnp.take(thr_table, tenant_slot, axis=0)
+        pred, per_class, margin = self.classify_features_margin(
+            features - thr_rows, bank, class_lo, class_hi)
+        return pred, per_class, margin, margin < tau
+
+    def classify_serve_shard(
+        self, features: Array, thr_table: Array, tenant_slot: Array,
+        bank: TemplateBank, class_lo: Array, class_hi: Array, row0: Array,
+    ) -> tuple[Array, Array, Array, Array]:
+        """Bank-sharded serve partials: gather + shift on this shard, then
+        the margin partials (per_class, top1, gidx, top2) — the engine's
+        cross-shard reduce recovers the global decision and applies tau."""
+        thr_rows = jnp.take(thr_table, tenant_slot, axis=0)
+        return self.classify_features_margin_shard(
+            features - thr_rows, bank, class_lo, class_hi, row0)
+
     # -- shard-local classify (bank-sharded execution, repro.match.plan) -----
     #
     # Under a bank-sharded PartitionPlan each device holds only class rows
@@ -341,7 +395,11 @@ class KernelBackend(MatchBackend):
 
     def _classify_kernel_path(self, features: Array, thresholds: Array,
                               bank: TemplateBank) -> tuple[Array, Array]:
-        """Fused single-pallas_call when the bank fits VMEM, else two-stage."""
+        """ONE pallas_call at any bank size: fully fused when the bank fits
+        the VMEM row budget, class-chunked (same dispatch, running per-class
+        max) past it. The old two-stage kernel + jnp epilogue fallback is
+        gone — the raw-scores kernels remain only behind the explicit
+        `*_scores` entry points."""
         from repro.kernels import layout
         from repro.kernels.acam_match import ops as match_ops
         from repro.kernels.acam_similarity import ops as sim_ops
@@ -355,19 +413,18 @@ class KernelBackend(MatchBackend):
                 return match_ops.classify_fused(features, thresholds,
                                                 bank.templates, bank.valid,
                                                 block=block)
-            return match_ops.classify(features, thresholds,
-                                      bank.templates.reshape(c * k, n),
-                                      bank.valid.reshape(c * k), c,
-                                      block=block)
+            pred, per_class, _ = match_ops.classify_fused_margins_chunked(
+                features.astype(jnp.float32), thresholds, bank.templates,
+                bank.valid, max_rows=MAX_FUSED_ROWS, block=block)
+            return pred, per_class
         if fused_rows <= MAX_FUSED_ROWS:
             return sim_ops.classify_fused(features, thresholds, bank.lower,
                                           bank.upper, bank.valid, alpha=alpha,
                                           block=block)
-        q = quant.binarize(features, thresholds)
-        return sim_ops.classify(q, bank.lower.reshape(c * k, n),
-                                bank.upper.reshape(c * k, n),
-                                bank.valid.reshape(c * k), c, alpha=alpha,
-                                block=block)
+        pred, per_class, _ = sim_ops.classify_fused_margins(
+            features, thresholds, bank.lower, bank.upper, bank.valid,
+            alpha=alpha, max_rows=MAX_FUSED_ROWS, block=block)
+        return pred, per_class
 
     def classify(self, queries, bank):
         n = queries.shape[-1]
@@ -381,6 +438,7 @@ class KernelBackend(MatchBackend):
                                  class_hi=None):
         from repro.kernels import layout
         from repro.kernels.acam_match import ops as match_ops
+        from repro.kernels.acam_similarity import ops as sim_ops
 
         c, k, n = bank.templates.shape
         if self.config.method == "feature_count":
@@ -397,8 +455,37 @@ class KernelBackend(MatchBackend):
                 features.astype(jnp.float32), bank.thresholds,
                 bank.templates, bank.valid, class_lo, class_hi,
                 max_rows=MAX_FUSED_ROWS, block=self.config.block)
-        return super().classify_features_margin(features, bank, class_lo,
-                                                class_hi)
+        # similarity: the symmetric single-dispatch margins kernel (chunked
+        # past the row budget; no more fused-classify + jnp margin epilogue)
+        return sim_ops.classify_fused_margins(
+            features, bank.thresholds, bank.lower, bank.upper, bank.valid,
+            class_lo, class_hi, alpha=self.config.alpha,
+            max_rows=MAX_FUSED_ROWS, block=self.config.block)
+
+    def classify_serve(self, features, thr_table, tenant_slot, bank,
+                       class_lo, class_hi, tau):
+        """The resident serving mega-kernel: the whole multi-tenant tick —
+        gather, binarize, match, per-class max, WTA, windowed margin,
+        escalation mask — in ONE pallas_call for BOTH methods.
+
+        ``serve_fusion="compose"`` keeps the pre-megakernel composition
+        (jnp gather/shift + fused margins kernel + jnp tau compare) as the
+        bit-identical benchmark baseline."""
+        if self.config.serve_fusion == "compose":
+            return super().classify_serve(features, thr_table, tenant_slot,
+                                          bank, class_lo, class_hi, tau)
+        from repro.kernels.acam_match import ops as match_ops
+        from repro.kernels.acam_similarity import ops as sim_ops
+
+        if self.config.method == "feature_count":
+            return match_ops.serve_classify(
+                features.astype(jnp.float32), thr_table, tenant_slot,
+                bank.templates, bank.valid, class_lo, class_hi, tau,
+                max_rows=MAX_FUSED_ROWS, block=self.config.block)
+        return sim_ops.serve_classify(
+            features, thr_table, tenant_slot, bank.lower, bank.upper,
+            bank.valid, class_lo, class_hi, tau, alpha=self.config.alpha,
+            max_rows=MAX_FUSED_ROWS, block=self.config.block)
 
 
 # ---------------------------------------------------------------------------

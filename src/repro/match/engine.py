@@ -63,7 +63,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.templates import TemplateBank
 from repro.match import backends as backends_lib
 from repro.match import plan as plan_lib
-from repro.match.backends import TINY_ELEMENTS, backend_for, backend_names
+from repro.match.backends import backend_for, backend_names, tiny_cutoff
 from repro.match.config import EngineConfig, validate
 from repro.match.plan import PartitionPlan, plan_for
 
@@ -151,37 +151,73 @@ def bank_specs(plan: PartitionPlan) -> TemplateBank:
 # the merge below is exact: the winner is the lexicographic max on
 # (score desc, index asc) — precisely `jnp.argmax`'s lowest-index tie rule —
 # and the global runner-up over "all classes except the winner's position"
-# is max(loser shards' top1, winner shard's top2). Gather size is
-# (shards, B) scalars: tiny next to the (B, C/shards) score work.
+# is max(loser shards' top1, winner shard's top2).
+#
+# Two strategies, both bit-identical (`plan.reduce` picks one):
+#
+#   allgather  gather all S partials ((S, B) scalars), fold sequentially —
+#              one collective, O(S) merge depth. The PR-6 behaviour.
+#   tree       XOR-butterfly: log2(S) `ppermute` rounds, each merging a
+#              partial from rank s ^ d. After round log2(S) every rank holds
+#              the identical global result. Exactness: the merge is
+#              associative + commutative on disjoint index sets (f32 max is
+#              exact, the lexicographic tie rule is order-free), so ANY
+#              reduction tree yields the same bits as the sequential fold.
+#              Requires a power-of-two axis (`plan.reduce_strategy` only
+#              selects it there).
 
-def _reduce_winner(top1: Array, gidx: Array, axis: str, num_shards: int
-                   ) -> tuple[Array, Array]:
+def _merge_winner(at, ai, bt, bi):
+    take = (bt > at) | ((bt == at) & (bi < ai))
+    return jnp.where(take, bt, at), jnp.where(take, bi, ai)
+
+
+def _merge_margin(at, ai, ar, bt, bi, br):
+    take = (bt > at) | ((bt == at) & (bi < ai))
+    # new runner-up: the losing side's top1 joins the candidate set
+    r = jnp.where(take, jnp.maximum(br, at), jnp.maximum(ar, bt))
+    return jnp.where(take, bt, at), jnp.where(take, bi, ai), r
+
+
+def _butterfly(parts: tuple, merge, axis: str, num_shards: int) -> tuple:
+    """XOR-butterfly all-reduce of per-shard partials under ``merge``."""
+    d = 1
+    while d < num_shards:
+        perm = [(s, s ^ d) for s in range(num_shards)]
+        peer = tuple(jax.lax.ppermute(p, axis, perm) for p in parts)
+        parts = merge(*parts, *peer)
+        d *= 2
+    return parts
+
+
+def _reduce_winner(top1: Array, gidx: Array, axis: str, num_shards: int,
+                   strategy: str = "allgather") -> tuple[Array, Array]:
+    if strategy == "tree":
+        return _butterfly((top1, gidx), _merge_winner, axis, num_shards)
     t = jax.lax.all_gather(top1, axis)  # (S, B)
     i = jax.lax.all_gather(gidx, axis)
     best_t, best_i = t[0], i[0]
     for s in range(1, num_shards):
-        take = (t[s] > best_t) | ((t[s] == best_t) & (i[s] < best_i))
-        best_t = jnp.where(take, t[s], best_t)
-        best_i = jnp.where(take, i[s], best_i)
+        best_t, best_i = _merge_winner(best_t, best_i, t[s], i[s])
     return best_t, best_i
 
 
 def _reduce_margin(top1: Array, gidx: Array, top2: Array, axis: str,
-                   num_shards: int, cap: float) -> tuple[Array, Array]:
+                   num_shards: int, cap: float,
+                   strategy: str = "allgather") -> tuple[Array, Array]:
     """Combine windowed margin partials -> (pred, margin), matching
     `repro.kernels.layout.windowed_margin` bit for bit (same clamp, same
     empty-window pred 0 / margin 0 behaviour)."""
-    t = jax.lax.all_gather(top1, axis)
-    i = jax.lax.all_gather(gidx, axis)
-    r = jax.lax.all_gather(top2, axis)
-    best_t, best_i, best_r = t[0], i[0], r[0]
-    for s in range(1, num_shards):
-        take = (t[s] > best_t) | ((t[s] == best_t) & (i[s] < best_i))
-        # new runner-up: the losing side's top1 joins the candidate set
-        best_r = jnp.where(take, jnp.maximum(r[s], best_t),
-                           jnp.maximum(best_r, t[s]))
-        best_t = jnp.where(take, t[s], best_t)
-        best_i = jnp.where(take, i[s], best_i)
+    if strategy == "tree":
+        best_t, best_i, best_r = _butterfly((top1, gidx, top2), _merge_margin,
+                                            axis, num_shards)
+    else:
+        t = jax.lax.all_gather(top1, axis)
+        i = jax.lax.all_gather(gidx, axis)
+        r = jax.lax.all_gather(top2, axis)
+        best_t, best_i, best_r = t[0], i[0], r[0]
+        for s in range(1, num_shards):
+            best_t, best_i, best_r = _merge_margin(best_t, best_i, best_r,
+                                                   t[s], i[s], r[s])
     top2g = jnp.maximum(best_r, best_t - cap)
     margin = jnp.where(jnp.isfinite(best_t), best_t - top2g, 0.0)
     return best_i.astype(jnp.int32), margin.astype(jnp.float32)
@@ -200,11 +236,16 @@ class MatchEngine:
     # -- backend resolution --------------------------------------------------
 
     def backend(self, n_elements: int | None = None) -> backends_lib.MatchBackend:
-        """Resolve the backend ("auto" -> reference for tiny shapes)."""
+        """Resolve the backend ("auto" -> reference for tiny shapes).
+
+        The tiny cutoff is per method (`repro.match.backends.tiny_cutoff`):
+        the measured reference/kernel crossover sits ~16x higher for the
+        similarity method than for feature_count."""
         name = self.config.backend
         if name == "auto":
             name = ("reference" if n_elements is not None
-                    and n_elements < TINY_ELEMENTS else "kernel")
+                    and n_elements < tiny_cutoff(self.config.method)
+                    else "kernel")
         return backend_for(name, self.config)
 
     # -- plan-driven sharded execution ---------------------------------------
@@ -303,7 +344,8 @@ class MatchEngine:
         def fn(q, bk):
             per_class, top1, gidx = getattr(be, shard_method)(
                 q, bk, self._row0(plan))
-            _, pred = _reduce_winner(top1, gidx, plan.model, plan.bank_shards)
+            _, pred = _reduce_winner(top1, gidx, plan.model, plan.bank_shards,
+                                     plan.reduce)
             return pred, per_class
 
         return self._shard(fn, (queries,), (bank,), plan, mesh,
@@ -364,13 +406,81 @@ class MatchEngine:
             per_class, top1, gidx, top2 = be.classify_features_margin_shard(
                 feats, bk, lo, hi, self._row0(plan))
             pred, margin = _reduce_margin(top1, gidx, top2, plan.model,
-                                          plan.bank_shards, cap)
+                                          plan.bank_shards, cap, plan.reduce)
             return pred, per_class, margin
 
         return self._shard(fn, (features, class_lo, class_hi), (bank,), plan,
                            mesh, (plan.batch_spec(1),
                                   plan.batch_class_spec(2),
                                   plan.batch_spec(1)))
+
+    def classify_serve(self, features: Array, thr_table: Array,
+                       tenant_slot: Array, bank: TemplateBank,
+                       class_lo: Array | None = None,
+                       class_hi: Array | None = None,
+                       tau: Array | None = None
+                       ) -> tuple[Array, Array, Array, Array]:
+        """The multi-tenant serving tick: gather + margins + escalation.
+
+        Each row binarises against its tenant's thresholds row
+        (``thr_table[tenant_slot[i]]``) and classifies inside its class
+        window; ``escalate[i] = margin[i] < tau[i]`` is the confidence
+        cascade's per-request routing bit (tau -inf = never escalate — the
+        padding/no-head value). Returns (pred, per_class, margin, escalate).
+
+        On the kernel backend the whole thing is ONE pallas_call
+        (`acam_match_serve` / `acam_similarity_serve`) unless
+        ``config.serve_fusion == "compose"``. Under a bank-sharded plan each
+        device serves its class-row shard and `plan.reduce` picks the
+        cross-shard merge (all-gather fold or the XOR-butterfly tree), then
+        the tau compare runs on the reduced margin — all bit-identical to
+        replicated execution.
+        """
+        b = features.shape[0]
+        c = bank.templates.shape[0]
+        if class_lo is None:
+            class_lo = jnp.zeros((b,), jnp.int32)
+        if class_hi is None:
+            class_hi = jnp.full((b,), c, jnp.int32)
+        if tau is None:
+            tau = jnp.full((b,), -jnp.inf, jnp.float32)
+        be = self.backend(self._elements(b, bank))
+        plan, mesh = self.plan(b, c, be)
+        if not plan.sharded:
+            return be.classify_serve(features, thr_table, tenant_slot, bank,
+                                     class_lo, class_hi, tau)
+        batch_args = (features, tenant_slot, class_lo, class_hi, tau)
+        if not plan.bank_sharded:
+            def fn(feats, slot, lo, hi, t, thr, bk):
+                return be.classify_serve(feats, thr, slot, bk, lo, hi, t)
+
+            in_specs = tuple(plan.batch_spec() for _ in batch_args) + (
+                P(), bank_specs(plan))
+            sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                out_specs=(plan.batch_spec(1),
+                                           plan.batch_spec(2),
+                                           plan.batch_spec(1),
+                                           plan.batch_spec(1)),
+                                check_rep=False)
+            return sharded(*batch_args, thr_table, bank)
+        cap = be.margin_cap(features.shape[-1])
+
+        def fn(feats, slot, lo, hi, t, thr, bk):
+            per_class, top1, gidx, top2 = be.classify_serve_shard(
+                feats, thr, slot, bk, lo, hi, self._row0(plan))
+            pred, margin = _reduce_margin(top1, gidx, top2, plan.model,
+                                          plan.bank_shards, cap, plan.reduce)
+            return pred, per_class, margin, margin < t
+
+        in_specs = tuple(plan.batch_spec() for _ in batch_args) + (
+            P(), bank_specs(plan))
+        sharded = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=(plan.batch_spec(1),
+                                       plan.batch_class_spec(2),
+                                       plan.batch_spec(1),
+                                       plan.batch_spec(1)),
+                            check_rep=False)
+        return sharded(*batch_args, thr_table, bank)
 
     def __call__(self, features: Array, bank: TemplateBank,
                  class_lo: Array | None = None,

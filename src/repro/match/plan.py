@@ -39,9 +39,17 @@ Who consumes the plan:
 from __future__ import annotations
 
 import math
+import os
 from typing import NamedTuple
 
 from jax.sharding import PartitionSpec as P
+
+#: below this many bank shards the sequential all-gather fold wins: the
+#: butterfly's log2(S) ppermute rounds cost more launch latency than one
+#: all-gather of S tiny rows. At S >= 8 the tree's O(log S) depth takes over.
+TREE_REDUCE_MIN_SHARDS = 8
+
+REDUCE_STRATEGIES = ("allgather", "tree")
 
 
 class PartitionPlan(NamedTuple):
@@ -56,6 +64,12 @@ class PartitionPlan(NamedTuple):
     rows_per_shard: class rows per bank shard, C // bank_shards (0 when the
                     bank is replicated) — shard s owns global class rows
                     [s * rows_per_shard, (s + 1) * rows_per_shard)
+    reduce:         cross-shard reduce strategy over the model axis:
+                    "allgather" (gather all S partials, sequential fold) or
+                    "tree" (XOR-butterfly ppermute, log2(S) rounds). Both are
+                    bit-identical — the merge is associative and f32 max is
+                    exact — so this is purely a latency knob
+                    (`reduce_strategy`).
     """
 
     dp: tuple[str, ...] = ()
@@ -63,6 +77,7 @@ class PartitionPlan(NamedTuple):
     dp_devices: int = 1
     bank_shards: int = 1
     rows_per_shard: int = 0
+    reduce: str = "allgather"
 
     @property
     def batch_sharded(self) -> bool:
@@ -95,6 +110,27 @@ class PartitionPlan(NamedTuple):
 
 #: the no-mesh / no-divisibility plan: run the backend directly.
 REPLICATED = PartitionPlan()
+
+
+def reduce_strategy(bank_shards: int) -> str:
+    """Pick the cross-shard reduce for a model axis of ``bank_shards``.
+
+    Default: the XOR-butterfly tree when the shard count is a power of two
+    at or past `TREE_REDUCE_MIN_SHARDS` (log2(S) hops beat gathering S
+    partials), the sequential all-gather fold otherwise. The butterfly
+    pairs rank s with s ^ d, so it needs a power-of-two axis.
+
+    ``REPRO_REDUCE_STRATEGY=tree|allgather`` overrides the heuristic —
+    "tree" still falls back to all-gather on non-power-of-two axes, where
+    the butterfly is undefined.
+    """
+    pow2 = bank_shards > 1 and (bank_shards & (bank_shards - 1)) == 0
+    env = os.environ.get("REPRO_REDUCE_STRATEGY", "").strip().lower()
+    if env in REDUCE_STRATEGIES:
+        return env if env != "tree" or pow2 else "allgather"
+    if pow2 and bank_shards >= TREE_REDUCE_MIN_SHARDS:
+        return "tree"
+    return "allgather"
 
 
 def mesh_axes():
@@ -142,7 +178,8 @@ def plan_for(*, batch: int, num_classes: int,
         if s > 1 and num_classes % s == 0:
             model, bank_shards, rows = axes.model, s, num_classes // s
     plan = PartitionPlan(dp=dp, model=model, dp_devices=dp_devices,
-                         bank_shards=bank_shards, rows_per_shard=rows)
+                         bank_shards=bank_shards, rows_per_shard=rows,
+                         reduce=reduce_strategy(bank_shards))
     if not plan.sharded:
         return REPLICATED, None
     return plan, mesh

@@ -202,6 +202,10 @@ class ACAMService:
         self.scheduler = MicroBatchScheduler(
             self.registry, slots=spec.scheduler.slots, engine=spec.engine,
             recorder=self.obs)
+        # the cascade's tau rides into the serve kernel: the scheduler asks
+        # this per dispatched request and the margin < tau compare happens
+        # in the fused dispatch (SlotResult.escalate), not here in python
+        self.scheduler.tau_fn = self._margin_tau_of
         self.scheduler.monitor.sink = self.obs.record_straggler
         self.obs.slots_gauge.set(spec.scheduler.slots)
         #: control-plane failure state (simulated device loss): None = every
@@ -246,6 +250,12 @@ class ACAMService:
         the served backend's native margin units."""
         tau = self.spec.cascade.tau if raw is None else raw
         return tau * self._tau_scale
+
+    def _margin_tau_of(self, tenant_id: str) -> float | None:
+        """The scheduler's `tau_fn`: resolved margin threshold for one
+        tenant (None = no CNN head registered, never escalate)."""
+        rt = self._tenants.get(tenant_id)
+        return None if rt is None else rt.margin_tau
 
     # -- tenant lifecycle ---------------------------------------------------
 
@@ -420,8 +430,9 @@ class ACAMService:
         for r in results:
             rt = self._tenants.get(r.item.tenant_id) if r.error is None \
                 else None
-            wants = rt is not None and rt.margin_tau is not None \
-                and r.margin < rt.margin_tau
+            # the margin < tau compare already ran inside the serve kernel
+            # (SlotResult.escalate); rt guards tenants evicted mid-flight
+            wants = rt is not None and r.escalate
             if wants and not shedding:
                 escalate.append(r)
                 keep.append((r, True, False))

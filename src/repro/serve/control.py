@@ -188,6 +188,7 @@ class HybridService(ACAMService):
                 self.registry, slots=new_spec.scheduler.slots,
                 engine=new_spec.engine, monitor=self.scheduler.monitor,
                 recorder=self.obs)
+            self.scheduler.tau_fn = self._margin_tau_of
             stats.slots = new_spec.scheduler.slots
             self.scheduler.stats = stats
             self.obs.slots_gauge.set(new_spec.scheduler.slots)

@@ -4,19 +4,21 @@ Requests from *any* tenant are coalesced into fixed-slot micro-batches and
 served by ONE fused classify dispatch per tick:
 
     tick:  pop <= slots requests (FIFO across tenants)
-           -> one gather of per-slot tenant threshold rows (the bank gather)
-           -> shift features so the shared zero-threshold binarisation is
-              correct per tenant
-           -> one `repro.match.MatchEngine.classify_features_margin` call
-              over the registry's super-bank with per-slot class windows
-              (`[offset, offset + C)` — Eq. 12 never crosses tenants),
-              executed under the engine's 2D PartitionPlan when a mesh is
-              installed: slots shard over the dp axes, the super-bank's
-              class rows over the model axis (the registry aligns tenant
-              windows to those shards), and the per-slot winner/margin come
-              from the engine's cross-shard (max, argmax) reduce —
-              bit-identical to replicated execution, still ONE dispatch
-           -> per-slot tenant-local predictions + confidence margins
+           -> one `repro.match.MatchEngine.classify_serve` call over the
+              registry's super-bank: the per-slot tenant threshold-row
+              gather, binarisation, match, per-slot class-window Eq. 12
+              decision + margin AND the cascade's ``margin < tau``
+              escalation bit — on the kernel backend all of it is ONE
+              resident pallas_call (`acam_*_serve`), with no jnp prologue
+              or epilogue. Executed under the engine's 2D PartitionPlan
+              when a mesh is installed: slots shard over the dp axes, the
+              super-bank's class rows over the model axis (the registry
+              aligns tenant windows to those shards), and the per-slot
+              winner/margin come from the engine's cross-shard
+              (max, argmax) reduce (all-gather fold or XOR-butterfly tree,
+              `plan.reduce`) — bit-identical to replicated execution,
+              still ONE dispatch
+           -> per-slot tenant-local predictions + margins + escalate bits
 
 The batch shape is pinned to ``slots`` (ragged tails are padded with empty
 class windows, which the kernel resolves to pred 0 / margin 0 and the
@@ -25,9 +27,10 @@ so the jitted tick function compiles once and stays hot across tenant
 churn. Batch-fill statistics are recorded per tick so coalescing quality is
 observable (`SchedulerStats.occupancy`).
 
-The scheduler knows nothing of the cascade: it returns `(pred, margin)` per
-slot and the service layer (`repro.serve.acam_service`) decides
-accept-at-ACAM vs escalate-to-CNN-head. It does own two resilience duties:
+The scheduler's cascade knowledge is one number per slot: the service
+installs a ``tau_fn`` (tenant id -> margin threshold, None = no head) and
+each `SlotResult` comes back with the in-kernel `escalate` bit; the service
+layer (`repro.serve.acam_service`) still owns the routing itself. It does own two resilience duties:
 `expire()` pops requests that outlived the cascade's per-request deadline
 (the FIFO prefix), and every tick's wall time heartbeats into a
 `repro.ft.elastic.StragglerMonitor` — slow-tick strikes are surfaced
@@ -77,6 +80,7 @@ class SlotResult:
     pred_local: int  # tenant-local class id (global - tenant offset)
     margin: float  # Eq. 12 winner-vs-runner-up confidence margin
     error: str | None = None  # e.g. tenant evicted while queued
+    escalate: bool = False  # in-kernel margin < tau(tenant) cascade bit
 
 
 @dataclasses.dataclass
@@ -128,27 +132,28 @@ class SchedulerStats:
 
 @functools.partial(jax.jit, static_argnames=("config", "mesh_gen"))
 def _batched_classify(bank, thr_table, feats, tenant_slot, class_lo, class_hi,
-                      *, config, mesh_gen: int):
-    """The whole tick on device: ONE threshold-row gather + ONE fused
-    classify-with-margins dispatch over the multi-tenant super-bank.
+                      tau, *, config, mesh_gen: int):
+    """The whole tick on device: ONE `MatchEngine.classify_serve` dispatch
+    over the multi-tenant super-bank — the per-slot threshold-row gather,
+    binarisation, windowed Eq. 12 decision/margin and the ``margin < tau``
+    escalation bit included (a single pallas_call on the kernel backend
+    under ``serve_fusion="mega"``).
 
     ``config`` is the full `repro.match.EngineConfig`, a *static* argument
     resolved eagerly by `tick()` (never the process default read at trace
     time), so switching backends — or any other engine knob, e.g. the
-    device-physics noise config of a spec-built service — between ticks
-    re-traces instead of replaying a stale executable. ``mesh_gen``
-    (`distributed.context.generation()`, also static) does the same for the
-    mesh: the engine bakes its `PartitionPlan` — batch over the dp axes,
-    super-bank class rows over the model axis — into this trace, and
-    installing a different mesh between ticks keys a fresh executable
-    instead of silently replaying the stale layout."""
+    device-physics noise config of a spec-built service or the mega/compose
+    serve fusion — between ticks re-traces instead of replaying a stale
+    executable. ``mesh_gen`` (`distributed.context.generation()`, also
+    static) does the same for the mesh: the engine bakes its
+    `PartitionPlan` — batch over the dp axes, super-bank class rows over
+    the model axis — into this trace, and installing a different mesh
+    between ticks keys a fresh executable instead of silently replaying the
+    stale layout."""
     del mesh_gen  # cache key only: a new mesh generation forces a re-trace
-    thr_rows = jnp.take(thr_table, tenant_slot, axis=0)  # the bank gather
-    # per-tenant thresholds -> shared zero threshold: binarize(f, thr_t)
-    # == binarize(f - thr_t, 0), and the super-bank's thresholds are zeros
-    shifted = feats - thr_rows
     eng = match_lib.engine_from_config(config)
-    return eng.classify_features_margin(shifted, bank, class_lo, class_hi)
+    return eng.classify_serve(feats, thr_table, tenant_slot, bank, class_lo,
+                              class_hi, tau)
 
 
 class MicroBatchScheduler:
@@ -192,6 +197,11 @@ class MicroBatchScheduler:
         #: feeds the registry's scheduler counters. `SchedulerStats` stays
         #: as a plain in-object mirror (cheap, and directly inspectable).
         self.recorder = recorder
+        #: optional tenant_id -> margin threshold (float | None). Installed
+        #: by the service layer; feeds the per-slot ``tau`` operand so the
+        #: cascade's ``margin < tau`` compare runs inside the serve kernel.
+        #: None (or a None return) pins tau to -inf: never escalate.
+        self.tau_fn = None
         self._queue: deque[WorkItem] = deque()
 
     @property
@@ -258,10 +268,15 @@ class MicroBatchScheduler:
         slot_idx = np.zeros((self.slots,), np.int32)
         lo = np.zeros((self.slots,), np.int32)
         hi = np.zeros((self.slots,), np.int32)  # padding: empty window [0, 0)
+        tau = np.full((self.slots,), -np.inf, np.float32)  # never escalate
         for i, (item, entry) in enumerate(batch):
             feats[i] = item.features
             slot_idx[i] = entry.slot
             lo[i], hi[i] = entry.window
+            if self.tau_fn is not None:
+                t = self.tau_fn(item.tenant_id)
+                if t is not None:
+                    tau[i] = t
 
         from repro.distributed import context
 
@@ -270,13 +285,15 @@ class MicroBatchScheduler:
         annotate = self.recorder.profile_span("acam_fused_dispatch") \
             if self.recorder is not None else contextlib.nullcontext()
         with annotate:
-            pred, _, margin = _batched_classify(
+            pred, _, margin, esc = _batched_classify(
                 self.registry.device_bank(),
                 self.registry.thresholds_table(),
                 jnp.asarray(feats), jnp.asarray(slot_idx), jnp.asarray(lo),
-                jnp.asarray(hi), config=cfg, mesh_gen=context.generation())
+                jnp.asarray(hi), jnp.asarray(tau), config=cfg,
+                mesh_gen=context.generation())
             pred = np.asarray(pred)
             margin = np.asarray(margin)
+            esc = np.asarray(esc)
         dt = time.perf_counter() - t0
         self.last_verdict = self.monitor.observe(0, dt)
         slow = bool(self.last_verdict["stragglers"])
@@ -289,7 +306,7 @@ class MicroBatchScheduler:
         return dead + [
             SlotResult(item=item, entry=entry,
                        pred_local=int(pred[i]) - entry.offset,
-                       margin=float(margin[i]))
+                       margin=float(margin[i]), escalate=bool(esc[i]))
             for i, (item, entry) in enumerate(batch)]
 
     def drain(self) -> list[SlotResult]:

@@ -63,18 +63,18 @@ class TestServiceEndToEnd:
         svc, banks, protos = _make_service()
         calls = {"n": 0}
         # count dispatches at the engine layer (what the scheduler calls)
-        orig = match_lib.MatchEngine.classify_features_margin
+        orig = match_lib.MatchEngine.classify_serve
 
         def counting(self, *args, **kwargs):
             calls["n"] += 1
             return orig(self, *args, **kwargs)
 
-        match_lib.MatchEngine.classify_features_margin = counting
+        match_lib.MatchEngine.classify_serve = counting
         try:
             reqs, truth = _mixed_requests(protos)
             responses = svc.serve(reqs)
         finally:
-            match_lib.MatchEngine.classify_features_margin = orig
+            match_lib.MatchEngine.classify_serve = orig
         return svc, banks, reqs, truth, responses, calls["n"]
 
     def test_one_gather_one_kernel_call_per_batch(self, served):

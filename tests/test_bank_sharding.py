@@ -15,7 +15,9 @@ Three layers of coverage:
     B in {256, 1024}, for tenant windows adjacent to shard edges, bucket-
     padded rows, shard-straddling layouts the allocator must re-place, and
     evict/re-register across a shard, with exactly ONE sharded dispatch per
-    scheduler tick.
+    scheduler tick; the XOR-butterfly tree reduce (`PartitionPlan.reduce`,
+    REPRO_REDUCE_STRATEGY=tree) agrees bit-for-bit with the all-gather fold
+    and with replicated execution.
 """
 import os
 import subprocess
@@ -279,11 +281,11 @@ class TestForced2x2Mesh:
                     protos["tx"] = p
                     del protos["t1"]
                 calls = {"n": 0}
-                orig = match.MatchEngine.classify_features_margin
+                orig = match.MatchEngine.classify_serve
                 def counting(self, *a, **kw):
                     calls["n"] += 1
                     return orig(self, *a, **kw)
-                match.MatchEngine.classify_features_margin = counting
+                match.MatchEngine.classify_serve = counting
                 try:
                     reqs = []
                     for i, (tid, p) in enumerate(sorted(protos.items())):
@@ -293,7 +295,7 @@ class TestForced2x2Mesh:
                                  for j in range(40)]
                     rs = svc.serve(reqs)
                 finally:
-                    match.MatchEngine.classify_features_margin = orig
+                    match.MatchEngine.classify_serve = orig
                 stats = svc.scheduler.stats
                 assert stats.classify_dispatches == stats.ticks
                 assert 1 <= calls["n"] <= stats.ticks  # one engine
@@ -323,6 +325,77 @@ class TestForced2x2Mesh:
                     print("OK", layout, slots, churn)
             """, timeout=900)
         assert out.count("OK") == 4
+
+    def test_tree_reduce_bit_identical_to_allgather(self):
+        """The XOR-butterfly cross-shard reduce (REPRO_REDUCE_STRATEGY=tree)
+        yields the same bits as the all-gather fold AND as replicated
+        execution — winner, margins, per-class scores, escalation set."""
+        out = run_sub("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+            import jax, jax.numpy as jnp
+            import numpy as np
+            from repro import match
+            from repro.core.templates import TemplateBank
+            from repro.distributed import context
+
+            assert match.reduce_strategy(8) == "tree"       # default past 8
+            assert match.reduce_strategy(2) == "allgather"  # small axis
+            assert match.reduce_strategy(6) == "allgather"  # not a pow2
+            os.environ["REPRO_REDUCE_STRATEGY"] = "tree"
+            assert match.reduce_strategy(2) == "tree"       # env override
+            assert match.reduce_strategy(6) == "allgather"  # pow2 required
+
+            key = jax.random.PRNGKey(7)
+            c, k, n, b, T = 256, 2, 128, 256, 8
+            tmpl = (jax.random.uniform(key, (c, k, n)) > 0.5
+                    ).astype(jnp.float32)
+            valid = jnp.ones((c, k), bool).at[0, 1].set(False)
+            bank = TemplateBank(tmpl, jnp.zeros_like(tmpl),
+                                jnp.ones_like(tmpl), valid, jnp.zeros((n,)))
+            eng = match.engine_for(backend="kernel")
+            feats = jax.random.normal(jax.random.fold_in(key, 1), (b, n))
+            thr_table = jax.random.normal(jax.random.fold_in(key, 2),
+                                          (T, n)) * 0.1
+            rng = np.random.RandomState(3)
+            slot = jnp.asarray(rng.randint(0, T, b), jnp.int32)
+            lo = rng.randint(0, c - 8, size=b)
+            lo[:2] = (120, 100)  # windows straddling the row-128 shard edge
+            hi = np.minimum(lo + rng.randint(1, 64, size=b), c)
+            hi[:2] = (160, 156)
+            lo, hi = jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32)
+            tau = jnp.asarray(rng.uniform(0, 12, b), jnp.float32)
+
+            context.clear()
+            rep = eng.classify_serve(feats, thr_table, slot, bank, lo, hi,
+                                     tau)
+            pm_rep = eng.classify_features_margin(feats, bank, lo, hi)
+
+            results = {}
+            for strat in ("allgather", "tree"):
+                os.environ["REPRO_REDUCE_STRATEGY"] = strat
+                mesh = jax.make_mesh((2, 2), ("data", "model"))
+                context.set_mesh_axes("data", "model", mesh)
+                plan, _ = match.plan_for(batch=b, num_classes=c)
+                assert plan.bank_shards == 2 and plan.reduce == strat, plan
+                results[strat] = (
+                    eng.classify_serve(feats, thr_table, slot, bank, lo, hi,
+                                       tau),
+                    eng.classify_features_margin(feats, bank, lo, hi))
+                context.clear()
+
+            for strat, (serve, pm) in results.items():
+                for a, b_ in zip(rep, serve):
+                    assert np.array_equal(np.asarray(a), np.asarray(b_)), \
+                        (strat, "serve")
+                for a, b_ in zip(pm_rep, pm):
+                    assert np.array_equal(np.asarray(a), np.asarray(b_)), \
+                        (strat, "margin")
+            esc = np.asarray(rep[3])
+            assert esc.any() and not esc.all()
+            print("OK tree")
+            """)
+        assert "OK tree" in out
 
     def test_repro_force_mesh_env_path(self):
         """The CI entry: REPRO_FORCE_MESH=2x2 via forcemesh two-phase."""
