@@ -75,6 +75,25 @@ def frontend_energy(effective_ops: int, *, paper_faithful: bool = True) -> float
     return effective_ops * per_op_energy(bits=8, paper_faithful=paper_faithful)
 
 
+def lm_decode_energy(active_params: int, tokens: int, *,
+                     paper_faithful: bool = True) -> float:
+    """Per-request LM decode cost, in the same op-energy model as §V-D.
+
+    The semantic-cache router's "expensive backend" is a decode engine,
+    not the paper's CNN; its cost model is the standard transformer
+    inference count — 2 x N_active MACs per processed token (the forward
+    half of the 6N rule; N_active = `ArchConfig.active_param_count()`, so
+    MoE archs are charged for routed experts only) — priced at the same
+    Horowitz per-op figure (and the same `paper_faithful` unit handling)
+    as the front-end, so LM rows in the energy ledger are directly
+    comparable to the Eq. 14 ACAM numbers. ``tokens`` should count every
+    token the engine pushed through the stack for the request: prompt
+    (prefill) + generated.
+    """
+    ops = 2 * int(active_params) * int(tokens)
+    return ops * per_op_energy(bits=8, paper_faithful=paper_faithful)
+
+
 def hybrid_report(
     *,
     student_macs: int = 23_785_120,

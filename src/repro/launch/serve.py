@@ -16,8 +16,16 @@ Two workloads behind one CLI:
           whole boot sequence — mesh install -> registry -> scheduler ->
           cascade — so there is no constructor ordering to get wrong.
 
+  lm-cached — the two composed (`repro.serve.semantic_cache`): the ACAM
+          tier fronts the decode engine as a template router; repeats of
+          an admitted prompt answer from the response store at Eq. 14
+          ACAM energy, cold prompts escalate to decode and are admitted
+          back as templates.
+
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --requests 8 --max-new 16 --temperature 0.8
+  PYTHONPATH=src python -m repro.launch.serve --workload lm-cached \
+      --requests 32 --unique 8 --temperature 0.7
   PYTHONPATH=src python -m repro.launch.serve --workload acam \
       --tenants 8 --requests 256 --slots 64
   PYTHONPATH=src python -m repro.launch.serve --workload acam \
@@ -181,9 +189,73 @@ def run_acam(args) -> dict:
     return {"accuracy": acc, **m}
 
 
+def run_lm_cached(args) -> dict:
+    """The two engines composed: ACAM semantic cache fronting LM decode.
+
+    A Zipf-repeat prompt trace is routed through
+    `repro.serve.semantic_cache.SemanticCacheService` — repeats of an
+    admitted prompt answer from the response store at Eq. 14 ACAM energy,
+    cold prompts escalate to ONE `Engine.generate` call per tick and are
+    admitted back as templates."""
+    from repro import configs
+    from repro.models import lm
+    from repro.serve import spec as spec_lib
+    from repro.serve.engine import Engine
+    from repro.serve.semantic_cache import (PromptRequest,
+                                            SemanticCacheService,
+                                            synthetic_prompt_trace)
+
+    cfg = configs.get(args.arch, smoke=args.smoke)
+    params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
+    eng = Engine(cfg, params, batch_size=args.batch_size,
+                 max_len=args.max_len, temperature=args.temperature,
+                 seed=args.seed)
+    spec = spec_lib.ServiceSpec(
+        registry=spec_lib.RegistrySpec(num_features=args.features),
+        scheduler=spec_lib.SchedulerSpec(slots=args.slots),
+        cascade=spec_lib.CascadeSpec(backend="lm", tau=args.margin_tau,
+                                     tau_units="count"),
+        router=spec_lib.RouterSpec(max_templates=max(args.unique, 1)),
+        mesh=spec_lib.MeshSpec(install=False))
+    if args.print_spec:
+        print(spec.to_json())
+    svc = SemanticCacheService.from_spec(spec, engine=eng)
+    svc.add_tenant("edge-0")
+
+    trace = synthetic_prompt_trace(args.seed, vocab=cfg.vocab,
+                                   n_unique=args.unique,
+                                   n_requests=args.requests)
+    # arrivals come in bursts, not all at once: a template admitted on a
+    # miss can only serve hits on LATER ticks, so a single slots-wide
+    # tick over the whole trace would (correctly) never hit
+    burst = max(1, min(args.slots, args.unique))
+    t0 = time.time()
+    out = []
+    for i in range(0, len(trace), burst):
+        out.extend(svc.serve_prompts(
+            PromptRequest("edge-0", p, max_new_tokens=args.max_new)
+            for p in trace[i:i + burst]))
+    dt = time.time() - t0
+    m = svc.metrics()
+    hits = sum(r.cache_hit for r in out)
+    served = sum(r.error is None for r in out)
+    fleet = svc.obs.ledger.fleet()
+    print(f"{cfg.name} behind ACAM semantic cache: {served} requests "
+          f"({args.unique} unique), {hits} cache hits "
+          f"({hits / max(served, 1):.2f} hit rate), "
+          f"{m['classify_dispatches']} fused match dispatches over "
+          f"{m['ticks']} ticks, {dt:.2f}s")
+    print(f"  energy: {m['nj_per_request']:.1f} nJ/request mean "
+          f"(ACAM share {fleet['backend_share']:.4f}; decode misses carry "
+          f"{fleet['frontend_nj']:.1f} nJ of the "
+          f"{fleet['total_nj']:.1f} nJ total)")
+    return {"hits": hits, "served": served, "seconds": dt, **m}
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=("lm", "acam"), default="lm")
+    ap.add_argument("--workload", choices=("lm", "acam", "lm-cached"),
+                    default="lm")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -193,6 +265,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # lm-cached
+    ap.add_argument("--unique", type=int, default=8,
+                    help="lm-cached: distinct prompts in the Zipf trace "
+                         "(the rest are cache-hitting repeats)")
     # acam
     ap.add_argument("--spec", default=None, metavar="FILE.json",
                     help="boot the acam service from a declarative "
@@ -253,8 +329,10 @@ def main(argv=None) -> dict:
                          "per bank shard (fold_in(seed, shard))")
     args = ap.parse_args(argv)
     if args.requests is None:
-        args.requests = 8 if args.workload == "lm" else 256
-    return (run_acam if args.workload == "acam" else run_lm)(args)
+        args.requests = {"lm": 8, "acam": 256, "lm-cached": 32}[args.workload]
+    runner = {"lm": run_lm, "acam": run_acam,
+              "lm-cached": run_lm_cached}[args.workload]
+    return runner(args)
 
 
 if __name__ == "__main__":

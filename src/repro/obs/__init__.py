@@ -106,6 +106,19 @@ class FlightRecorder:
             "acam_escalation_dispatches_total",
             "coalesced dense-head dispatches (one per tick with "
             "escalations)")
+        self.cache_events = r.counter(
+            "acam_semantic_cache_events_total",
+            "semantic-cache router outcomes "
+            "(event=hit/miss/insert/evict)")
+        self.cache_hit_latency = r.histogram(
+            "acam_cache_hit_latency_ms",
+            "submit -> response wall time of semantic-cache hits (ms)",
+            buckets=buckets, window=window)
+        self.decode_latency = r.histogram(
+            "acam_lm_decode_latency_ms",
+            "submit -> response wall time of cache misses escalated to "
+            "LM decode (ms)",
+            buckets=buckets, window=window)
         self.load_shed_ticks = r.counter(
             "acam_load_shed_ticks_total", "ticks served in load-shed mode")
         self.busy_seconds = r.counter(
@@ -212,6 +225,22 @@ class FlightRecorder:
 
     def record_shed_tick(self) -> None:
         self.load_shed_ticks.inc()
+
+    # -- semantic-cache router ---------------------------------------------
+
+    def record_cache_event(self, event: str, n: int = 1) -> None:
+        """One semantic-cache router outcome: "hit" (served from the
+        response store), "miss" (escalated to decode), "insert" (template
+        + response admitted), "evict" (template row invalidated by LRU
+        pressure). Conservation: hit + miss == error-free routed
+        responses; insert - evict == live templates."""
+        self.cache_events.inc(n, event=event)
+
+    def record_cache_latency(self, hit: bool, latency_s: float) -> None:
+        """Feed the hit-vs-decode histogram pair: the two distributions
+        whose gap IS the semantic cache's latency win."""
+        h = self.cache_hit_latency if hit else self.decode_latency
+        h.observe(latency_s * 1e3)
 
     def record_escalation_dispatch(self) -> None:
         self.esc_dispatches.inc()

@@ -85,6 +85,10 @@ class ClassifyResponse:
     #: True: overload degraded this answer — the margin asked for CNN
     #: escalation but load-shed mode served the ACAM winner instead
     shed: bool = False
+    #: winner's absolute per-class score in native units (0 on error).
+    #: The semantic-cache router's hit_score floor reads this; plain
+    #: classification traffic can ignore it.
+    score: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -431,8 +435,11 @@ class ACAMService:
             rt = self._tenants.get(r.item.tenant_id) if r.error is None \
                 else None
             # the margin < tau compare already ran inside the serve kernel
-            # (SlotResult.escalate); rt guards tenants evicted mid-flight
-            wants = rt is not None and r.escalate
+            # (SlotResult.escalate); rt guards tenants evicted mid-flight.
+            # _wants_escalation is the routing-policy hook: the base
+            # cascade trusts the in-kernel bit verbatim, the semantic
+            # cache adds its absolute hit_score floor on top.
+            wants = rt is not None and self._wants_escalation(r)
             if wants and not shedding:
                 escalate.append(r)
                 keep.append((r, True, False))
@@ -446,6 +453,7 @@ class ACAMService:
             esc_pred = self._run_escalation(escalate)
 
         now = time.perf_counter()
+        fcost: dict[int, float] = {}
         for r, escalated, shed in keep:
             if r.error is not None:
                 responses.append(ClassifyResponse(
@@ -456,21 +464,26 @@ class ACAMService:
                 continue
             rt = self._tenants[r.item.tenant_id]
             pred = esc_pred[r.item.request_id] if escalated else r.pred_local
-            e = rt.backend_j + (self._frontend_j if escalated else 0.0)
+            fj = self._frontend_cost(r.item.request_id) if escalated else 0.0
+            fcost[r.item.request_id] = fj
+            e = rt.backend_j + fj
             responses.append(ClassifyResponse(
                 request_id=r.item.request_id,
                 tenant_id=r.item.tenant_id, pred=pred,
                 margin=r.margin, escalated=escalated, energy_j=e,
-                latency_s=now - r.item.submit_t, shed=shed))
+                latency_s=now - r.item.submit_t, shed=shed,
+                score=r.score))
         self._finalize_step(responses, t0, shedding, fill=len(results),
                             n_expired=n_expired, dispatched=True,
-                            escalation=bool(escalate), now=now)
+                            escalation=bool(escalate), now=now,
+                            frontend=fcost)
         return responses
 
     def _finalize_step(self, responses: list[ClassifyResponse], t0: float,
                        shedding: bool, *, fill: int, n_expired: int,
                        dispatched: bool, escalation: bool,
-                       now: float | None = None) -> None:
+                       now: float | None = None,
+                       frontend: dict[int, float] | None = None) -> None:
         """Book one step into the flight recorder: close every response's
         span (disposition + latency + SS V-D energy split), bump the busy
         clock and queue gauge, and — when the event log is on — append the
@@ -485,9 +498,11 @@ class ACAMService:
                 obs.finish_request(r, 0.0, 0.0)
             else:
                 rt = self._tenants[r.tenant_id]
-                obs.finish_request(
-                    r, rt.backend_j,
-                    self._frontend_j if r.escalated else 0.0)
+                if frontend is not None:
+                    fj = frontend.get(r.request_id, 0.0)
+                else:
+                    fj = self._frontend_j if r.escalated else 0.0
+                obs.finish_request(r, rt.backend_j, fj)
         now = time.perf_counter() if now is None else now
         obs.add_busy(now - t0)
         obs.set_queue_depth(self.scheduler.qsize)
@@ -504,6 +519,22 @@ class ACAMService:
                 queue_depth=self.scheduler.qsize,
                 shed_mode=int(shedding),
                 energy_j=sum(r.energy_j for r in responses))
+
+    def _wants_escalation(self, r: SlotResult) -> bool:
+        """Routing-policy hook: should this served slot escalate to the
+        expensive backend? The base cascade trusts the in-kernel
+        ``margin < tau`` bit verbatim; `repro.serve.semantic_cache`
+        overrides this to stack its absolute winner-score floor on top."""
+        return r.escalate
+
+    def _frontend_cost(self, request_id: int) -> float:
+        """Energy charged for ONE escalated request. The base cascade's
+        CNN head costs the same §V-D figure for every request; the
+        semantic cache overrides this with the request's actual per-token
+        decode cost. Only consulted for escalated requests — hits are
+        charged E_backend alone."""
+        del request_id
+        return self._frontend_j
 
     def _run_escalation(self, escalate: list[SlotResult]) -> dict[int, int]:
         """Coalesce a tick's escalated slots into one dense-head dispatch."""

@@ -6,10 +6,11 @@
     the language-model zoo. Requests (token prompts) are admitted into a
     fixed-size batch; prefill builds the KV/SSM cache, then a jitted decode
     loop samples tokens until EOS or max_new_tokens. Slot reuse gives
-    continuous batching: when a sequence finishes, the next queued request
-    takes its slot (prefill-on-join with the ragged-length mask). State is
-    *stateful per request* (the growing cache), so the unit of scheduling
-    is a decode step.
+    continuous batching: when a sequence finishes mid-batch, the next
+    queued request joins its slot — a single-row prefill left-padded to the
+    batch's current length, spliced into the live cache — instead of
+    waiting for the whole group to drain. Fill quality is reported
+    honestly in `Engine.stats` (`BatchStats.occupancy`, joins, groups).
 
   * **ACAM classification** (`repro.serve.acam_service.ACAMService`, with
     `registry`/`scheduler`) — the paper's hybrid edge classifier as a
@@ -20,15 +21,33 @@
     over the stacked template super-bank, then the confidence cascade
     escalates low-margin requests to the CNN logits head.
 
+The two engines meet in `repro.serve.semantic_cache`: the ACAM tier fronts
+this decode engine as a template router (hits answer from a response
+store, misses escalate here).
+
+Reproducibility contract: at temperature > 0 every sampled token draws
+from ``fold_in(fold_in(base_key, request_rid), token_index)`` — a key that
+depends only on the engine seed, the request's admission-order id and the
+position of the token within that request. Batch composition (who shares
+the batch, join timing, group splits) can therefore never change WHICH
+random stream a request consumes. (Logits themselves remain left-pad
+-length sensitive — pad tokens attend — so end-to-end token identity
+additionally needs identical grouping, which single-`generate()`-call
+replays provide.)
+
+Join prefills compile once per distinct current length (the row is padded
+to the live batch's length); at smoke scale this is a handful of
+executables, and resident groups reuse the fixed-shape decode step.
+
 Use this engine for token generation (`launch/serve.py --workload lm`,
 `examples/serve_batched.py`); use the ACAM service for classification
-traffic (`--workload acam`). Both run smoke configs on CPU (the examples)
-and production configs under the pod mesh (dry-run proves the lowering; see
-launch/serve.py).
+traffic (`--workload acam`), and the semantic-cache router for cached LM
+traffic (`--workload lm-cached`).
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Any
 
 import jax
@@ -47,6 +66,41 @@ class Request:
     eos_id: int | None = None
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    #: admission-order id, the per-request PRNG stream selector. Assigned
+    #: by `Engine.generate` when < 0; callers may pin it to replay a
+    #: specific stream (the semantic cache does not — its bit-identity
+    #: comes from replaying identical admission orders).
+    rid: int = -1
+
+
+@dataclasses.dataclass
+class BatchStats:
+    """Honest batch-fill accounting for the decode loop."""
+
+    slots: int = 0  # engine batch size
+    groups: int = 0  # batched group prefills (group starts)
+    joins: int = 0  # mid-batch slot admissions (prefill-on-join)
+    requests: int = 0  # requests served (initial fills + joins)
+    decode_steps: int = 0  # batched decode dispatches
+    slot_steps: int = 0  # slot-steps that carried a live request
+
+    @property
+    def occupancy(self) -> float:
+        """Live-slot fraction across decode steps (1.0 = no idle slots)."""
+        if self.decode_steps == 0 or self.slots == 0:
+            return 0.0
+        return self.slot_steps / (self.decode_steps * self.slots)
+
+    def as_dict(self) -> dict:
+        return {
+            "slots": self.slots,
+            "groups": self.groups,
+            "joins": self.joins,
+            "requests": self.requests,
+            "decode_steps": self.decode_steps,
+            "slot_steps": self.slot_steps,
+            "occupancy": round(self.occupancy, 4),
+        }
 
 
 class Engine:
@@ -58,50 +112,138 @@ class Engine:
         self.cfg, self.params = cfg, params
         self.batch_size, self.max_len = batch_size, max_len
         self.temperature = temperature
-        self.key = jax.random.PRNGKey(seed)
+        self.key = jax.random.PRNGKey(seed)  # base key; never split
+        self.stats = BatchStats(slots=batch_size)
+        self._rid_counter = 0
 
         self._decode = jax.jit(
             lambda p, t, c: lm.decode_step(p, cfg, t, c))
         self._prefill = jax.jit(
             lambda p, x: lm.prefill(p, cfg, x, max_len=max_len))
 
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        if self.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
-        self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(sub, logits / self.temperature, axis=-1)
+        temp = float(temperature)
+        if temp > 0.0:
+
+            def _sample(key, logits, rids, steps):
+                def one(lg, rid, t):
+                    k = jax.random.fold_in(jax.random.fold_in(key, rid), t)
+                    return jax.random.categorical(k, lg / temp, axis=-1)
+
+                return jax.vmap(one)(logits, rids, steps)
+        else:
+
+            def _sample(key, logits, rids, steps):
+                del key, rids, steps
+                return jnp.argmax(logits, axis=-1)
+
+        self._sample_fn = jax.jit(_sample)
+
+        def _join(live, new, slot):
+            # splice a freshly prefilled single-row cache into batch slot
+            # `slot` of the live cache: every array leaf batches at axis 1
+            # (the Cache contract), `length` is the shared scalar clock —
+            # both caches sit at the same length, so keep the live one
+            def ins(a, b):
+                if a.ndim == 0:
+                    return a
+                return jax.lax.dynamic_update_index_in_dim(
+                    a, jnp.squeeze(b, axis=1), slot, 1)
+
+            return jax.tree.map(ins, live, new)
+
+        self._join_cache = jax.jit(_join)
+
+    def _sample_slots(self, logits, slots) -> np.ndarray:
+        """Sample one token per row: rid/token-index keyed, so the draw for
+        request r's t-th token is identical whatever batch it rides in."""
+        rids = np.array([s.rid if s is not None else 0 for s in slots],
+                        np.int32)
+        steps = np.array([len(s.out) if s is not None else 0 for s in slots],
+                         np.int32)
+        return np.array(self._sample_fn(
+            self.key, logits, jnp.asarray(rids), jnp.asarray(steps)))
+
+    @staticmethod
+    def _push_token(r: Request, t: int) -> None:
+        r.out.append(t)
+        if len(r.out) >= r.max_new_tokens or \
+                (r.eos_id is not None and t == r.eos_id):
+            r.done = True
 
     def generate(self, requests: list[Request]) -> list[Request]:
-        """Serve all requests with batched prefill + decode (greedy batching:
-        groups of `batch_size`, left-padded prompts so the last prompt token
-        is aligned at the batch's final position, ragged finish)."""
-        for i in range(0, len(requests), self.batch_size):
-            self._serve_batch(requests[i : i + self.batch_size])
+        """Serve all requests with continuous batching: a batched group
+        prefill seeds up to `batch_size` slots, the decode loop samples
+        until EOS/max_new_tokens per slot (ragged finish), and a finished
+        slot admits the FIFO head of the queue mid-batch via a
+        prefill-on-join (left-padded to the group's current length). The
+        queue head only waits when its prompt is longer than the current
+        length or the remaining room cannot fit its budget — then the
+        group drains and a fresh group prefill restarts at that prompt's
+        natural length."""
+        for r in requests:
+            if r.rid < 0:
+                r.rid = self._rid_counter
+                self._rid_counter += 1
+        queue = deque(requests)
+        while queue:
+            self._serve_group(queue)
         return requests
 
-    def _serve_batch(self, batch: list[Request]) -> None:
-        b = len(batch)
-        plen = max(len(r.prompt) for r in batch)
+    def _can_join(self, r: Request, cur_len: int) -> bool:
+        return (len(r.prompt) <= cur_len
+                and cur_len + r.max_new_tokens <= self.max_len)
+
+    def _serve_group(self, queue: deque) -> None:
+        b = self.batch_size
+        group = [queue.popleft() for _ in range(min(b, len(queue)))]
+        slots: list[Request | None] = group + [None] * (b - len(group))
+        self.stats.groups += 1
+        self.stats.requests += len(group)
+
+        plen = max(len(r.prompt) for r in group)
         prompts = np.zeros((b, plen), np.int32)
-        for i, r in enumerate(batch):
+        for i, r in enumerate(group):
             prompts[i, plen - len(r.prompt):] = r.prompt  # left-pad
         logits, cache = self._prefill(self.params, jnp.asarray(prompts))
-        tok = self._sample(logits)  # (b,)
-        for i, r in enumerate(batch):
-            r.out.append(int(tok[i]))
-        steps = max(r.max_new_tokens for r in batch) - 1
-        for _ in range(steps):
-            logits, cache = self._decode(self.params, tok[:, None], cache)
-            tok = self._sample(logits[:, 0])
-            for i, r in enumerate(batch):
-                if r.done or len(r.out) >= r.max_new_tokens:
-                    r.done = True
-                    continue
-                t = int(tok[i])
-                r.out.append(t)
-                if r.eos_id is not None and t == r.eos_id:
-                    r.done = True
-            if all(r.done or len(r.out) >= r.max_new_tokens for r in batch):
+        cur_len = plen
+        tok = self._sample_slots(logits, slots)
+        for i, r in enumerate(group):
+            self._push_token(r, int(tok[i]))
+
+        while True:
+            # retire finished slots, then admit the queue head into any
+            # free slot it fits (FIFO: only the head may join — skipping
+            # ahead would reorder service nondeterministically)
+            for i in range(b):
+                if slots[i] is not None and slots[i].done:
+                    slots[i] = None
+                if slots[i] is None and queue \
+                        and self._can_join(queue[0], cur_len):
+                    nxt = queue.popleft()
+                    slots[i] = nxt
+                    self.stats.joins += 1
+                    self.stats.requests += 1
+                    row = np.zeros((1, cur_len), np.int32)
+                    row[0, cur_len - len(nxt.prompt):] = nxt.prompt
+                    jlogits, jcache = self._prefill(
+                        self.params, jnp.asarray(row))
+                    cache = self._join_cache(cache, jcache, i)
+                    jtok = self._sample_slots(jlogits, [nxt])
+                    tok[i] = jtok[0]
+                    self._push_token(nxt, int(jtok[0]))
+                    if nxt.done:  # max_new_tokens == 1 / instant EOS
+                        slots[i] = None
+            live = [i for i in range(b) if slots[i] is not None]
+            if not live or cur_len >= self.max_len:
                 break
-        for r in batch:
-            r.done = True
+            logits, cache = self._decode(
+                self.params, jnp.asarray(tok)[:, None], cache)
+            cur_len += 1
+            self.stats.decode_steps += 1
+            self.stats.slot_steps += len(live)
+            tok = self._sample_slots(logits[:, 0], slots)
+            for i in live:
+                self._push_token(slots[i], int(tok[i]))
+        for s in slots:  # out of room (cur_len hit max_len): truncate
+            if s is not None:
+                s.done = True

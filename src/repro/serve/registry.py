@@ -135,6 +135,21 @@ class TemplateBankRegistry:
         (hot update may relocate it; evict removes it)."""
         return self._tenants.get(tenant_id)
 
+    def bank_of(self, tenant_id: str) -> TemplateBank:
+        """The tenant's CURRENT bank, read back out of the packed host
+        arrays as (num_classes, k, N) host copies — byte-identical to what
+        `device_bank()` serves for this tenant's window. This is how
+        restore paths (e.g. the semantic cache's template slots) rebuild
+        per-tenant state from a loaded registry without re-deriving it."""
+        e = self.get(tenant_id)
+        sl = slice(e.offset, e.offset + e.num_classes)
+        return TemplateBank(
+            templates=self._templates[sl, :e.k].copy(),
+            lower=self._lower[sl, :e.k].copy(),
+            upper=self._upper[sl, :e.k].copy(),
+            valid=self._valid[sl, :e.k].copy(),
+            thresholds=self._thr[e.slot].copy())
+
     @property
     def capacity_classes(self) -> int:
         return self._c_cap

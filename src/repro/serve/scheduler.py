@@ -81,6 +81,11 @@ class SlotResult:
     margin: float  # Eq. 12 winner-vs-runner-up confidence margin
     error: str | None = None  # e.g. tenant evicted while queued
     escalate: bool = False  # in-kernel margin < tau(tenant) cascade bit
+    #: winner's absolute per-class score in the backend's native units
+    #: (match count 0..N, or matchline fraction 0..1). The margin above is
+    #: relative — a one-row class window clamps it to the cap — so absolute
+    #: acceptance floors (the semantic cache's hit_score) read this.
+    score: float = 0.0
 
 
 @dataclasses.dataclass
@@ -285,13 +290,14 @@ class MicroBatchScheduler:
         annotate = self.recorder.profile_span("acam_fused_dispatch") \
             if self.recorder is not None else contextlib.nullcontext()
         with annotate:
-            pred, _, margin, esc = _batched_classify(
+            pred, per_class, margin, esc = _batched_classify(
                 self.registry.device_bank(),
                 self.registry.thresholds_table(),
                 jnp.asarray(feats), jnp.asarray(slot_idx), jnp.asarray(lo),
                 jnp.asarray(hi), jnp.asarray(tau), config=cfg,
                 mesh_gen=context.generation())
             pred = np.asarray(pred)
+            per_class = np.asarray(per_class)  # logically (slots, C_cap)
             margin = np.asarray(margin)
             esc = np.asarray(esc)
         dt = time.perf_counter() - t0
@@ -303,10 +309,16 @@ class MicroBatchScheduler:
                 [item.request_id for item in popped], len(batch), dt, slow,
                 t0)
 
+        # winner's absolute score: per_class is logically (slots, C_cap)
+        # under every plan, so per_class[i, pred[i]] is uniform. An empty
+        # window's pred is 0 and its score -inf; clamp to 0.0 (no match).
+        score = per_class[np.arange(len(batch)), pred[:len(batch)]]
+        score = np.where(np.isfinite(score), score, 0.0)
         return dead + [
             SlotResult(item=item, entry=entry,
                        pred_local=int(pred[i]) - entry.offset,
-                       margin=float(margin[i]), escalate=bool(esc[i]))
+                       margin=float(margin[i]), escalate=bool(esc[i]),
+                       score=float(score[i]))
             for i, (item, entry) in enumerate(batch)]
 
     def drain(self) -> list[SlotResult]:

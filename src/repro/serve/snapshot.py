@@ -77,6 +77,12 @@ def service_state(svc) -> dict:
         "next_id": svc._next_id,
         "has_heads": svc._head_w is not None,
     }
+    # service-subclass hook (e.g. the semantic cache's response store +
+    # template-slot occupancy): JSON-serialisable state that must ride the
+    # same atomic snapshot as the registry arrays it indexes into
+    extra = getattr(svc, "_extra_snapshot_state", None)
+    if extra is not None:
+        meta["extra"] = extra()
     tree = {"registry": arrays,
             "meta": np.frombuffer(json.dumps(meta).encode("utf-8"),
                                   dtype=np.uint8).copy()}
@@ -157,6 +163,12 @@ def restore_service(ckpt: Checkpointer, step: int | None = None, *,
             if info["has_head"] else None,
             backend_j=energy_lib.backend_energy(
                 entry.valid_rows, svc.registry.num_features))
+    # subclass hook: adopt extra state AFTER the registry + tenants exist
+    # (the semantic cache rebuilds its template slots from the adopted
+    # registry bytes) and BEFORE any remesh transition moves placements
+    adopt = getattr(svc, "_adopt_snapshot_state", None)
+    if adopt is not None:
+        adopt(meta.get("extra") or {})
 
     # remesh_restore idiom: the target mesh (the snapshot's own, or the
     # override) is an ordinary reconfigure transition over the restored

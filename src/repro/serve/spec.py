@@ -94,7 +94,17 @@ class CascadeSpec(NamedTuple):
                       escalation dispatch (None: never shed on depth).
     ``shed_p99_ms``   rolling p99 latency budget; exceeding it also enters
                       load-shed mode until the recent window recovers
-                      (None: never shed on latency)."""
+                      (None: never shed on latency).
+    ``backend``       what the expensive escalation stage *is*: "cnn" (the
+                      paper's softmax head — `frontend_macs` et al. model
+                      its §V-D cost) or "lm" (a `serve.Engine` decode
+                      backend behind `repro.serve.semantic_cache`; misses
+                      are charged the per-token decode cost model from
+                      `repro.core.energy.lm_decode_energy` instead of the
+                      CNN MAC count). Load-shed mode is a "cnn"-only
+                      policy: a shed LM request cannot be answered from the
+                      ACAM stage alone (there is no cached response for
+                      it), so validate() rejects shed knobs under "lm"."""
 
     tau: float = 8.0  # accept threshold, in tau_units
     tau_units: str = "count"  # "count" (0..N) | "fraction" (0..1)
@@ -106,6 +116,51 @@ class CascadeSpec(NamedTuple):
     deadline_ms: float | None = None  # per-request queue deadline
     shed_queue: int | None = None  # load-shed on queue depth
     shed_p99_ms: float | None = None  # load-shed on rolling p99
+    backend: str = "cnn"  # "cnn" (softmax head) | "lm" (decode engine)
+
+
+class RouterSpec(NamedTuple):
+    """Semantic-cache router policy (`repro.serve.semantic_cache`), active
+    when ``cascade.backend == "lm"``. The router fronts the LM decode
+    engine with a per-tenant ACAM template bank: a confident match serves
+    the cached response; a miss escalates to decode and (policy-gated)
+    admits its embedding + response back into the bank.
+
+    ``enabled``            False = escalate-everything shadow mode: every
+                           prompt decodes, the match stage still runs (so
+                           its telemetry is comparable) but no hit is ever
+                           served and no template admitted — the bit-
+                           identity baseline against `serve.Engine` alone.
+    ``max_templates``      cached-template rows per tenant bank (k = 1).
+                           Admission past this evicts the tenant's LRU
+                           template (LRU order = the response store's).
+    ``response_capacity``  global bound on stored responses; evicting a
+                           response invalidates its template row (invariant:
+                           a valid template always has a stored response).
+    ``admit_on_miss``      False = read-only bank (no template churn).
+    ``hit_score``          absolute winner-score floor for serving a hit,
+                           as a fraction of a perfect match (0..1], or None
+                           to gate on the margin alone. The Eq. 12 margin
+                           is *relative*: a one-template bank has no
+                           runner-up, so its margin clamps to the window
+                           cap and would always read confident — the
+                           absolute floor is what keeps a half-matching
+                           prompt escalating to decode.
+    ``featurizer``         how prompts embed into the matcher's N-feature
+                           space: "hashing" (seeded token n-gram feature
+                           hashing, dependency-free) or "embedding" (mean-
+                           pooled model embedding rows through a seeded
+                           random projection — the backbone→ACAM-head path).
+    ``featurizer_seed``    seed for the featurizer's hash mix / projection.
+    """
+
+    enabled: bool = True
+    max_templates: int = 32
+    response_capacity: int = 1024
+    admit_on_miss: bool = True
+    hit_score: float | None = 0.9
+    featurizer: str = "hashing"
+    featurizer_seed: int = 0
 
 
 class ObsSpec(NamedTuple):
@@ -141,6 +196,8 @@ class ObsSpec(NamedTuple):
 
 
 TAU_UNITS = ("count", "fraction")
+CASCADE_BACKENDS = ("cnn", "lm")
+FEATURIZERS = ("hashing", "embedding")
 
 
 class ServiceSpec(NamedTuple):
@@ -153,6 +210,7 @@ class ServiceSpec(NamedTuple):
     scheduler: SchedulerSpec = SchedulerSpec()
     cascade: CascadeSpec = CascadeSpec()
     obs: ObsSpec = ObsSpec()
+    router: RouterSpec = RouterSpec()
 
     # -- validation ---------------------------------------------------------
 
@@ -198,6 +256,31 @@ class ServiceSpec(NamedTuple):
         if casc.shed_p99_ms is not None and casc.shed_p99_ms <= 0:
             raise ValueError(f"shed_p99_ms must be > 0 (or None), got "
                              f"{casc.shed_p99_ms}")
+        if casc.backend not in CASCADE_BACKENDS:
+            raise ValueError(f"unknown cascade backend {casc.backend!r}; "
+                             f"use {CASCADE_BACKENDS}")
+        if casc.backend == "lm" and (casc.shed_queue is not None
+                                     or casc.shed_p99_ms is not None):
+            raise ValueError(
+                'cascade.backend="lm" cannot load-shed: a shed request has '
+                "no cached response to fall back on (shed_queue and "
+                "shed_p99_ms must be None; bound load with max_queue / "
+                "deadline_ms instead)")
+        rtr = self.router
+        if rtr.max_templates < 1:
+            raise ValueError(f"router.max_templates must be >= 1, got "
+                             f"{rtr.max_templates}")
+        if rtr.response_capacity < rtr.max_templates:
+            raise ValueError(
+                f"router.response_capacity ({rtr.response_capacity}) below "
+                f"max_templates ({rtr.max_templates}): a single tenant's "
+                "bank could hold templates whose responses were evicted")
+        if rtr.hit_score is not None and not 0.0 < rtr.hit_score <= 1.0:
+            raise ValueError(f"router.hit_score must be in (0, 1] or None, "
+                             f"got {rtr.hit_score}")
+        if rtr.featurizer not in FEATURIZERS:
+            raise ValueError(f"unknown router featurizer "
+                             f"{rtr.featurizer!r}; use {FEATURIZERS}")
         if casc.tau_units not in TAU_UNITS:
             raise ValueError(f"unknown tau_units {casc.tau_units!r}; "
                              f"use {TAU_UNITS}")
@@ -266,6 +349,7 @@ class ServiceSpec(NamedTuple):
             "scheduler": self.scheduler._asdict(),
             "cascade": self.cascade._asdict(),
             "obs": self.obs._asdict(),
+            "router": self.router._asdict(),
         }
         eng = d["engine"]
         if eng["block"] is not None:
@@ -293,6 +377,7 @@ class ServiceSpec(NamedTuple):
             scheduler=SchedulerSpec(**d.get("scheduler", {})),
             cascade=CascadeSpec(**d.get("cascade", {})),
             obs=ObsSpec(**obs),
+            router=RouterSpec(**d.get("router", {})),
         )
 
     def to_json(self, *, indent: int | None = 1) -> str:

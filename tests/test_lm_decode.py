@@ -1,0 +1,153 @@
+"""LM decode-path contracts: prefill/decode_step parity, EOS and ragged
+finish, the engine's continuous batching, and the per-(request, token)
+PRNG reproducibility the semantic cache's bit-identity rests on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serve.engine import Engine, Request
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = configs.get("tinyllama-1.1b", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+class TestDecodeParity:
+    def test_prefill_matches_step_by_step_decode(self, stack):
+        """The last-position logits of one whole-prompt prefill must match
+        feeding the same prompt token-by-token through decode_step — the
+        KV/positional bookkeeping agreeing between the two entry points."""
+        cfg, params = stack
+        rng = np.random.RandomState(0)
+        prompt = rng.randint(0, cfg.vocab, size=12).astype(np.int32)
+        max_len = 32
+
+        full_logits, _ = lm.prefill(params, cfg, prompt[None, :],
+                                    max_len=max_len)
+
+        # seed the cache with the first token, then step the rest
+        step_logits, cache = lm.prefill(params, cfg, prompt[None, :1],
+                                        max_len=max_len)
+        for t in prompt[1:]:
+            step_logits3, cache = lm.decode_step(
+                params, cfg, jnp.full((1, 1), int(t), jnp.int32), cache)
+            step_logits = step_logits3[:, 0]
+        np.testing.assert_allclose(np.asarray(full_logits),
+                                   np.asarray(step_logits),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_parity_across_prefill_splits(self, stack):
+        """Splitting the prompt prefill/decode at any point lands on the
+        same distribution (argmax-stable)."""
+        cfg, params = stack
+        rng = np.random.RandomState(1)
+        prompt = rng.randint(0, cfg.vocab, size=10).astype(np.int32)
+        ref, _ = lm.prefill(params, cfg, prompt[None, :], max_len=32)
+        for split in (4, 7):
+            logits, cache = lm.prefill(params, cfg, prompt[None, :split],
+                                       max_len=32)
+            for t in prompt[split:]:
+                logits3, cache = lm.decode_step(
+                    params, cfg, jnp.full((1, 1), int(t), jnp.int32), cache)
+                logits = logits3[:, 0]
+            assert int(jnp.argmax(ref)) == int(jnp.argmax(logits))
+
+
+class TestEosAndRaggedFinish:
+    def test_eos_truncates_generation(self, stack):
+        cfg, params = stack
+        prompt = (np.arange(6) % cfg.vocab).astype(np.int32)
+        eng = Engine(cfg, params, batch_size=2, max_len=64)
+        (ref,) = eng.generate([Request(prompt=prompt, max_new_tokens=8)])
+        assert len(ref.out) == 8
+        eos = ref.out[3]  # force EOS at the 4th generated token
+        eng2 = Engine(cfg, params, batch_size=2, max_len=64)
+        (r,) = eng2.generate([Request(prompt=prompt, max_new_tokens=8,
+                                      eos_id=eos)])
+        assert r.done
+        assert r.out == ref.out[:ref.out.index(eos) + 1]
+        assert r.out[-1] == eos and len(r.out) <= 8
+
+    def test_ragged_finish_and_continuous_joins(self, stack):
+        """Slots finish at their own budgets; a finished slot admits the
+        next queued request mid-batch (joins > 0), and the stats stay
+        honest: every request served, occupancy in (0, 1]."""
+        cfg, params = stack
+        rng = np.random.RandomState(2)
+        eng = Engine(cfg, params, batch_size=3, max_len=64)
+        reqs = [Request(prompt=rng.randint(0, cfg.vocab, size=5 + i),
+                        max_new_tokens=3 + 2 * i) for i in range(6)]
+        out = eng.generate(reqs)
+        for i, r in enumerate(out):
+            assert r.done and len(r.out) == 3 + 2 * i
+            assert all(0 <= t < cfg.vocab for t in r.out)
+        s = eng.stats
+        assert s.requests == 6
+        assert s.joins >= 1  # continuous batching actually happened
+        assert s.groups < -(-6 // 3) + s.joins  # joins saved group starts
+        assert 0.0 < s.occupancy <= 1.0
+        assert s.slot_steps <= s.decode_steps * s.slots
+        d = s.as_dict()
+        assert d["joins"] == s.joins and d["occupancy"] == round(
+            s.occupancy, 4)
+
+    def test_max_len_truncates_mid_flight(self, stack):
+        cfg, params = stack
+        prompt = (np.arange(8) % cfg.vocab).astype(np.int32)
+        eng = Engine(cfg, params, batch_size=1, max_len=10)
+        (r,) = eng.generate([Request(prompt=prompt, max_new_tokens=16)])
+        assert r.done and len(r.out) <= 16  # ran out of cache room
+
+
+class TestSamplingReproducibility:
+    """temperature > 0: the fold_in(fold_in(key, rid), t) contract —
+    a request's sampled tokens cannot depend on batch composition."""
+
+    PLEN, MAX_NEW = 5, 6
+
+    def _reqs(self, cfg, n):
+        rng = np.random.RandomState(7)
+        return [Request(prompt=rng.randint(0, cfg.vocab, size=self.PLEN),
+                        max_new_tokens=self.MAX_NEW) for _ in range(n)]
+
+    def _engine(self, cfg, params, batch_size):
+        # max_len = PLEN + MAX_NEW - 1 makes _can_join always fail: every
+        # request runs in a fresh same-shape group, so logits see no pad
+        # variation and the outputs must be EXACTLY batch-size invariant
+        return Engine(cfg, params, batch_size=batch_size,
+                      max_len=self.PLEN + self.MAX_NEW - 1,
+                      temperature=0.7, seed=0)
+
+    def test_outputs_invariant_across_batch_sizes(self, stack):
+        cfg, params = stack
+        outs = {}
+        for b in (1, 2, 4):
+            reqs = self._reqs(cfg, 4)
+            self._engine(cfg, params, b).generate(reqs)
+            outs[b] = [r.out for r in reqs]
+        assert outs[1] == outs[2] == outs[4]
+
+    def test_stream_keyed_by_rid_not_slot(self, stack):
+        """Serving a request alone draws the same tokens as serving it
+        alongside neighbours — pin rids so the streams line up."""
+        cfg, params = stack
+        reqs = self._reqs(cfg, 3)
+        self._engine(cfg, params, 4).generate(reqs)
+        solo = self._reqs(cfg, 3)[1]
+        solo.rid = 1  # replay request 1's stream, alone in the batch
+        self._engine(cfg, params, 1).generate([solo])
+        assert solo.out == reqs[1].out
+
+    def test_greedy_ignores_temperature_machinery(self, stack):
+        cfg, params = stack
+        reqs = self._reqs(cfg, 2)
+        Engine(cfg, params, batch_size=2, max_len=32).generate(reqs)
+        again = self._reqs(cfg, 2)
+        Engine(cfg, params, batch_size=2, max_len=32).generate(again)
+        assert [r.out for r in reqs] == [r.out for r in again]

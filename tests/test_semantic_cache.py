@@ -1,0 +1,294 @@
+"""ACAM semantic cache router: spec plumbing, featurizers, hit/miss
+routing, energy attribution, durability, live backend swaps."""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serve import spec as spec_lib
+from repro.serve.engine import Engine, Request
+from repro.serve.semantic_cache import (PromptRequest, ResponseStore,
+                                        SemanticCacheService,
+                                        embedding_featurizer,
+                                        hashing_featurizer,
+                                        synthetic_prompt_trace)
+
+N_FEATURES = 64
+
+
+def make_spec(**router_kw):
+    router_kw.setdefault("max_templates", 8)
+    router_kw.setdefault("response_capacity", 16)
+    return spec_lib.ServiceSpec(
+        registry=spec_lib.RegistrySpec(num_features=N_FEATURES),
+        scheduler=spec_lib.SchedulerSpec(slots=8),
+        cascade=spec_lib.CascadeSpec(backend="lm", tau=8.0,
+                                     tau_units="count"),
+        router=spec_lib.RouterSpec(**router_kw),
+        mesh=spec_lib.MeshSpec(install=False))
+
+
+@pytest.fixture(scope="module")
+def lm_stack():
+    cfg = configs.get("tinyllama-1.1b", smoke=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def make_engine(cfg, params, **kw):
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("temperature", 0.7)
+    return Engine(cfg, params, **kw)
+
+
+class TestFeaturizers:
+    def test_hashing_deterministic_and_seeded(self):
+        f1 = hashing_featurizer(N_FEATURES, seed=3)
+        f2 = hashing_featurizer(N_FEATURES, seed=3)
+        f3 = hashing_featurizer(N_FEATURES, seed=4)
+        p = np.arange(12, dtype=np.int32)
+        np.testing.assert_array_equal(f1(p), f2(p))
+        assert not np.array_equal(f1(p), f3(p))
+
+    def test_hashing_separates_short_prompts(self):
+        # dense per-gram signatures: even 2-token prompts must not
+        # collide past the hit_score floor after binarisation
+        f = hashing_featurizer(N_FEATURES, seed=0)
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, 512, size=2) for _ in range(20)]
+        bits = np.stack([(f(p) > 0).astype(np.float32) for p in prompts])
+        agree = bits @ bits.T + (1 - bits) @ (1 - bits).T
+        off = agree[~np.eye(len(prompts), dtype=bool)]
+        assert off.max() < 0.9 * N_FEATURES
+
+    def test_embedding_featurizer_shapes(self, lm_stack):
+        cfg, params = lm_stack
+        f = embedding_featurizer(np.asarray(params["embed"]),
+                                 num_features=N_FEATURES, seed=0)
+        v = f(np.arange(5))
+        assert v.shape == (N_FEATURES,) and v.dtype == np.float32
+
+
+class TestRouterSpec:
+    def test_json_round_trip(self):
+        spec = make_spec(hit_score=0.8, admit_on_miss=False,
+                         featurizer="embedding", featurizer_seed=3)
+        again = spec_lib.ServiceSpec.from_json(spec.to_json())
+        assert again == spec
+        assert again.router.hit_score == 0.8
+        assert again.cascade.backend == "lm"
+
+    def test_from_dict_defaults_router(self):
+        d = make_spec().to_dict()
+        del d["router"]
+        spec = spec_lib.ServiceSpec.from_dict(d)
+        assert spec.router == spec_lib.RouterSpec()
+
+    def test_lm_backend_rejects_shed(self):
+        spec = make_spec()._replace(
+            cascade=spec_lib.CascadeSpec(backend="lm", shed_queue=10))
+        with pytest.raises(ValueError, match="shed"):
+            spec.validate()
+
+    def test_bad_backend_and_hit_score(self):
+        with pytest.raises(ValueError, match="backend"):
+            make_spec()._replace(cascade=spec_lib.CascadeSpec(
+                backend="gpu")).validate()
+        with pytest.raises(ValueError, match="hit_score"):
+            make_spec(hit_score=1.5).validate()
+        with pytest.raises(ValueError, match="response_capacity"):
+            make_spec(response_capacity=4, max_templates=8).validate()
+
+
+class TestResponseStore:
+    def test_lru_eviction_and_state_round_trip(self):
+        s = ResponseStore(2)
+        assert s.put(("a", 0), (1,)) == []
+        assert s.put(("a", 1), (2,)) == []
+        s.get(("a", 0))  # refresh: row 1 becomes LRU
+        assert s.put(("a", 2), (3,)) == [("a", 1)]
+        assert s.oldest_row("a") == 0
+        s2 = ResponseStore(2)
+        s2.load_state(s.state())
+        assert s2.state() == s.state()
+        assert s2.put(("a", 3), (4,)) == [("a", 0)]  # order survived
+
+
+class TestRouting:
+    def test_miss_admit_hit_replay(self, lm_stack):
+        cfg, params = lm_stack
+        svc = SemanticCacheService.from_spec(
+            make_spec(), engine=make_engine(cfg, params))
+        svc.add_tenant("edge-0")
+        trace = synthetic_prompt_trace(7, vocab=cfg.vocab, n_unique=4,
+                                       n_requests=12)
+        out = svc.serve_prompts(PromptRequest("edge-0", p, max_new_tokens=6)
+                                for p in trace)
+        hits = [r for r in out if r.cache_hit]
+        misses = [r for r in out if not r.cache_hit and r.error is None]
+        # slots=8: tick 1 serves 8 cold requests (within-tick repeats
+        # dedupe on admit), tick 2's 4 repeats all hit
+        assert len(misses) == 8 and len(hits) == 4
+        decoded = {r.template_id: r.tokens for r in misses}
+        for r in hits:
+            assert r.tokens == decoded[r.template_id]
+            assert r.score >= 0.9 * N_FEATURES  # exact match
+        m = svc.metrics()
+        assert m["classify_dispatches"] == m["ticks"]  # ONE fused dispatch
+        ev = svc.obs.cache_events
+        assert ev.value(event="hit") == len(hits)
+        assert ev.value(event="miss") == len(misses)
+        assert ev.value(event="insert") == 4  # deduped, not 8
+
+    def test_energy_ledger_bit_exact_and_asymmetric(self, lm_stack):
+        cfg, params = lm_stack
+        svc = SemanticCacheService.from_spec(
+            make_spec(), engine=make_engine(cfg, params))
+        svc.add_tenant("edge-0")
+        trace = synthetic_prompt_trace(3, vocab=cfg.vocab, n_unique=2,
+                                       n_requests=8)
+        # two bursts: burst 1 admits the uniques, burst 2's repeats hit
+        out = svc.serve_prompts(PromptRequest("edge-0", p, max_new_tokens=6)
+                                for p in trace[:2])
+        out += svc.serve_prompts(PromptRequest("edge-0", p, max_new_tokens=6)
+                                 for p in trace[2:])
+        assert abs(sum(r.energy_j for r in out)
+                   - svc.obs.ledger.fleet_j()) < 1e-18
+        hit_j = max(r.energy_j for r in out if r.cache_hit)
+        miss_j = min(r.energy_j for r in out if not r.cache_hit)
+        assert miss_j > 100 * hit_j  # the paper's asymmetry, LM-sized
+
+    def test_disabled_cache_bit_identical_to_bare_engine(self, lm_stack):
+        cfg, params = lm_stack
+        trace = synthetic_prompt_trace(5, vocab=cfg.vocab, n_unique=4,
+                                       n_requests=4)
+        svc = SemanticCacheService.from_spec(
+            make_spec(enabled=False),
+            engine=make_engine(cfg, params, batch_size=8))
+        svc.add_tenant("edge-0")
+        out = svc.serve_prompts(PromptRequest("edge-0", p, max_new_tokens=6)
+                                for p in trace)
+        assert not any(r.cache_hit for r in out)
+        ref_eng = make_engine(cfg, params, batch_size=8)
+        refs = ref_eng.generate([Request(prompt=p, max_new_tokens=6)
+                                 for p in trace])
+        assert [list(r.tokens) for r in out] == [r.out for r in refs]
+
+    def test_template_churn_under_tiny_bank(self, lm_stack):
+        cfg, params = lm_stack
+        svc = SemanticCacheService.from_spec(
+            make_spec(max_templates=2, response_capacity=2),
+            engine=make_engine(cfg, params))
+        svc.add_tenant("edge-0")
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab, size=10).astype(np.int32)
+                   for _ in range(5)]
+        for p in prompts:  # sequential: each tick = one distinct prompt
+            (r,) = svc.serve_prompts([PromptRequest("edge-0", p,
+                                                    max_new_tokens=4)])
+            assert not r.cache_hit
+        ev = svc.obs.cache_events
+        assert ev.value(event="insert") == 5
+        assert ev.value(event="evict") == 3  # 5 inserts into 2 rows
+        assert len(svc._store) <= 2
+        # the survivors still hit
+        (r,) = svc.serve_prompts([PromptRequest("edge-0", prompts[-1],
+                                                max_new_tokens=4)])
+        assert r.cache_hit
+
+    def test_cold_tenant_never_fabricates_hit(self, lm_stack):
+        cfg, params = lm_stack
+        svc = SemanticCacheService.from_spec(
+            make_spec(admit_on_miss=False),
+            engine=make_engine(cfg, params))
+        svc.add_tenant("edge-0")
+        trace = synthetic_prompt_trace(1, vocab=cfg.vocab, n_unique=2,
+                                       n_requests=6)
+        out = svc.serve_prompts(PromptRequest("edge-0", p, max_new_tokens=4)
+                                for p in trace)
+        assert not any(r.cache_hit for r in out)  # nothing ever admitted
+        assert svc.obs.cache_events.value(event="insert") == 0
+
+
+class TestDurability:
+    def test_snapshot_restore_engine_less_hits(self, lm_stack):
+        cfg, params = lm_stack
+        svc = SemanticCacheService.from_spec(
+            make_spec(), engine=make_engine(cfg, params))
+        svc.add_tenant("edge-0")
+        trace = synthetic_prompt_trace(11, vocab=cfg.vocab, n_unique=3,
+                                       n_requests=6)
+        out = svc.serve_prompts(PromptRequest("edge-0", p, max_new_tokens=5)
+                                for p in trace)
+        decoded = {r.template_id: r.tokens for r in out if not r.cache_hit}
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        with tempfile.TemporaryDirectory() as d:
+            svc.snapshot(Checkpointer(d))
+            svc2, report = SemanticCacheService.restore(Checkpointer(d))
+            # template bank + response store round-trip bit-identically
+            assert svc2._store.state() == svc._store.state()
+            s1, s2 = svc._templates["edge-0"], svc2._templates["edge-0"]
+            np.testing.assert_array_equal(s1.bits, s2.bits)
+            np.testing.assert_array_equal(s1.valid, s2.valid)
+            # hits serve with NO engine attached
+            replay = svc2.serve_prompts(
+                PromptRequest("edge-0", p, max_new_tokens=5)
+                for p in trace[:3])
+            assert all(r.cache_hit for r in replay)
+            assert [r.tokens for r in replay] == \
+                [decoded[r.template_id] for r in replay]
+
+    def test_restored_miss_without_engine_raises(self, lm_stack):
+        cfg, params = lm_stack
+        svc = SemanticCacheService.from_spec(
+            make_spec(), engine=make_engine(cfg, params))
+        svc.add_tenant("edge-0")
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        with tempfile.TemporaryDirectory() as d:
+            svc.snapshot(Checkpointer(d))
+            svc2, _ = SemanticCacheService.restore(Checkpointer(d))
+            svc2.submit_prompt(PromptRequest(
+                "edge-0", np.arange(8, dtype=np.int32)))
+            with pytest.raises(RuntimeError, match="decode engine"):
+                svc2.step_routed()
+
+
+class TestBackendSwap:
+    def test_cnn_lm_swap_drains_queued_work_both_ways(self, lm_stack):
+        from repro.serve.acam_service import (ClassifyRequest,
+                                              make_synthetic_tenant,
+                                              sample_tenant_queries)
+
+        cfg, params = lm_stack
+        spec = make_spec()
+        svc = SemanticCacheService.from_spec(
+            spec, engine=make_engine(cfg, params))
+        svc.add_tenant("edge-0")
+        trace = synthetic_prompt_trace(2, vocab=cfg.vocab, n_unique=3,
+                                       n_requests=3)
+        for p in trace:
+            svc.submit_prompt(PromptRequest("edge-0", p, max_new_tokens=4))
+        # lm -> cnn: the queued prompts drain under the OLD (lm) backend
+        cnn = spec._replace(cascade=spec.cascade._replace(backend="cnn"))
+        report = svc.reconfigure(cnn)
+        routed = svc.collect_routed(report.drained)
+        assert len(routed) == 3 and all(r.error is None for r in routed)
+        assert all(len(r.tokens) == 4 for r in routed)
+        assert svc.spec.cascade.backend == "cnn"
+        # cnn -> lm with queued classify traffic
+        bank, head, protos = make_synthetic_tenant(
+            3, num_features=N_FEATURES)
+        svc.register_tenant("clf-0", bank, head=head)
+        feats, _ = sample_tenant_queries(4, protos, 3)
+        for f in feats:
+            svc.submit(ClassifyRequest("clf-0", f))
+        report2 = svc.reconfigure(spec)
+        assert len(report2.drained) == 3
+        assert all(r.error is None for r in report2.drained)
+        assert svc.spec.cascade.backend == "lm"
