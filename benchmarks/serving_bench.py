@@ -680,6 +680,169 @@ def chaos_bench(*, smoke: bool = False, seed: int = 0,
     return entry
 
 
+def autopilot_bench(*, smoke: bool = True, seed: int = 0,
+                    telemetry_dir: str | None = None) -> dict | None:
+    """The self-driving fleet row: a bursty Zipf churn trace served with
+    the `repro.fleet` autopilot on, under a forced host mesh.
+
+    Tenants arrive via a `FleetManifest` apply; the trace's churn ops are
+    expressed as further manifest applies (evict the coldest tenant, then
+    the manifest that brings it back). The telemetry policy escalates
+    ``bank_shards`` under row pressure through the DOUBLE-BUFFERED rolling
+    reshard — shadow bank built between ticks, flipped at a tick boundary,
+    no drain — and the row prices that flip (``flip_downtime_ms``, from
+    the event log's ``buffer_flip`` lines) against the drained
+    ``reconfigure`` alternative measured in-situ on an identical service
+    (``drained_downtime_ms``). Asserts: at least one policy-initiated
+    flip; flip downtime strictly below the drained downtime; served
+    results bit-identical to a pinned-spec run of the same trace (policy
+    transitions are pure execution changes); and every logged
+    ``policy_decision`` replays to the same action from its frozen view
+    alone. Needs ``REPRO_FORCE_MESH`` (even device count); returns None
+    with a note when unavailable."""
+    import tempfile
+
+    import jax
+
+    from repro.distributed import context, forcemesh
+    from repro.fleet import (Autopilot, FleetManifest, PolicySpec,
+                             RegistryView, TenantSpec, explain,
+                             should_compact)
+    from repro.obs import read_events, write_prometheus
+    from repro.serve.control import HybridService
+
+    if forcemesh.env_spec() is None or len(jax.devices()) % 2:
+        print("skipping autopilot row: set REPRO_FORCE_MESH (even device "
+              "count)")
+        return None
+    traces = _traces()
+    slots = 16
+    # 6 tenants x 64 classes = 384 registered rows: 0.75 of the doubled
+    # 512-row capacity, exactly the policy's row-pressure threshold
+    cfg = traces.TraceConfig(
+        seed=seed, tenants=6, classes=64, num_features=NUM_FEATURES,
+        requests=160 if smoke else 640, burst=48, calm=8, phase_ticks=2,
+        churn_every=3)
+    manifest = FleetManifest(tenants=tuple(
+        TenantSpec(tenant_id=f"t{t}", seed=cfg.seed * 1000 + t,
+                   num_classes=cfg.classes)
+        for t in range(cfg.tenants)))
+    coldest = int(np.argmin(traces.zipf_weights(cfg)))
+    without_cold = FleetManifest(tenants=tuple(
+        t for t in manifest.tenants if t.tenant_id != f"t{coldest}"))
+    pool = traces.TenantPool(cfg)
+    trace = traces.make_trace(cfg)
+
+    def serve_trace(svc, pilot):
+        sig = []
+        for op in trace:
+            kind = op[0]
+            if kind == "submit":
+                svc.submit(pool.request(op[1], op[2]))
+            elif kind == "evict":
+                svc.apply_manifest(without_cold)
+            elif kind == "register":
+                svc.apply_manifest(manifest)
+            elif kind == "tick":
+                sig.extend((r.tenant_id, r.pred, r.escalated,
+                            round(r.margin, 6)) for r in svc.step())
+                if pilot is not None:
+                    pilot.observe_tick()
+                    sig.extend((r.tenant_id, r.pred, r.escalated,
+                                round(r.margin, 6))
+                               for r in pilot.take_drained())
+        return sig
+
+    context.clear()
+    with tempfile.TemporaryDirectory() as td:
+        tel_dir = telemetry_dir or os.path.join(td, "telemetry")
+        spec = make_spec(slots, requests=cfg.requests, bank_shards=1,
+                         install_mesh=True, telemetry_dir=tel_dir)
+        svc = HybridService.from_spec(spec)
+        svc.apply_manifest(manifest)
+        svc.serve([pool.request(0, seed + 1)])  # compile warmup
+        svc.reset_metrics()
+        pilot = Autopilot(svc, policy=PolicySpec(interval=4, hysteresis=2,
+                                                 cooldown=8))
+        sig = serve_trace(svc, pilot)
+        m = svc.metrics()
+
+        # the black box is the source of truth: flips, decisions and
+        # manifest applies all come off the JSONL event log, and every
+        # decision must replay from its own frozen view
+        events = read_events(svc.obs.events.path)
+        flips = [e for e in events if e["kind"] == "buffer_flip"]
+        decisions = [e for e in events if e["kind"] == "policy_decision"]
+        applies = sum(1 for e in events if e["kind"] == "manifest_apply")
+        assert flips, "autopilot never executed a double-buffered reshard"
+        assert applies >= 2, "churn never went through the manifest path"
+        for e in decisions:
+            view = RegistryView.from_dict(e["view"])
+            act = explain(view, pilot.policy)[0]
+            if act == "hold" and should_compact(view, pilot.policy):
+                act = "compact"
+            assert act == e["action"], (act, e["action"])
+        if telemetry_dir:
+            write_prometheus(svc.obs.registry,
+                             os.path.join(tel_dir, "metrics.prom"))
+
+        # pinned-spec control arm: same trace, same manifest churn, no
+        # autopilot — the policy's transitions must not change results
+        context.clear()
+        pinned = HybridService.from_spec(spec._replace(
+            obs=spec.obs._replace(telemetry_dir=None)))
+        pinned.apply_manifest(manifest)
+        pinned.serve([pool.request(0, seed + 1)])
+        pinned.reset_metrics()
+        pin_sig = serve_trace(pinned, None)
+        assert sig == pin_sig, "autopilot changed served results"
+
+        # the drained alternative, priced in-situ: identical service,
+        # full queue, quiesce-and-reshard 1->2
+        context.clear()
+        drained_svc = HybridService.from_spec(spec._replace(
+            obs=spec.obs._replace(telemetry_dir=None)))
+        drained_svc.apply_manifest(manifest)
+        warm = [pool.request(t % cfg.tenants, 777_000 + t)
+                for t in range(4 * slots)]
+        drained_svc.serve(warm)  # warm every bucketed shape
+        for r in warm[:slots]:
+            drained_svc.submit(r)
+        report = drained_svc.reconfigure(drained_svc.spec._replace(
+            mesh=drained_svc.spec.mesh._replace(bank_shards=2)))
+        assert len(report.drained) == slots
+        drained_ms = round(report.downtime_s * 1e3, 3)
+        context.clear()
+
+    flip_ms = max(e["flip_ms"] for e in flips)
+    assert flip_ms < drained_ms, \
+        f"flip {flip_ms} ms not below drained {drained_ms} ms"
+    entry = {
+        "tenants": cfg.tenants, "slots": slots, "requests": cfg.requests,
+        "classes": cfg.classes, "matching_backend": "default",
+        "bank_sharding": svc.registry.bank_shards,
+        "trace": "autopilot",
+        "flip_downtime_ms": flip_ms,
+        "drained_downtime_ms": drained_ms,
+        "policy_flips": len(flips),
+        "policy_decisions": len(decisions),
+        "manifest_applies": applies,
+        "requests_per_s": m["requests_per_s"],
+        "latency_p50_ms": m["latency_p50_ms"],
+        "latency_p99_ms": m["latency_p99_ms"],
+        "escalation_rate": m["escalation_rate"],
+        "nj_per_request": m["nj_per_request"],
+        "occupancy": m["occupancy"],
+        "classify_dispatches": m["classify_dispatches"],
+    }
+    print(f"autopilot trace: {len(flips)} rolling reshards to "
+          f"bank_shards={entry['bank_sharding']}, flip "
+          f"{flip_ms:.2f} ms vs drained {drained_ms:.1f} ms "
+          f"({len(decisions)} policy decisions, {applies} manifest "
+          "applies, bit-identical to the pinned run)")
+    return entry
+
+
 def lm_cache_bench(*, smoke: bool = False, seed: int = 0) -> list[dict]:
     """The ACAM semantic cache in front of LM decode, swept over hit rate.
 
@@ -882,6 +1045,10 @@ def sweep(*, smoke: bool = False, seed: int = 0) -> list[dict]:
     # from the flight recorder's event log
     entries.append(burst_bench(smoke=smoke, seed=seed))
     entries.append(chaos_bench(smoke=smoke, seed=seed))
+    # self-driving fleet row: autopilot over a churn trace, flip-vs-drained
+    pilot_row = autopilot_bench(smoke=smoke, seed=seed)
+    if pilot_row is not None:
+        entries.append(pilot_row)
     # telemetry tax: sinks-off vs full recorder on one identical stream
     entries.append(telemetry_overhead_bench(smoke=smoke, seed=seed))
     # serve fusion win: composed tick vs the resident mega-kernel
@@ -930,6 +1097,8 @@ def _row_name(e: dict) -> str:
         return "serving_megakernel"
     if "telemetry_overhead_pct" in e:
         return "serving_telemetry_overhead"
+    if "flip_downtime_ms" in e:
+        return "serving_autopilot"
     if "reshard_downtime_ms" in e:
         return f"serving_reshard_1to{e['bank_sharding']}"
     if e.get("trace") == "chaos":
@@ -961,6 +1130,11 @@ def _row_derived(e: dict) -> str:
         return (f"overhead={e['telemetry_overhead_pct']}%,"
                 f"base={e['base_us_per_request']}us,"
                 f"tel={e['telemetry_us_per_request']}us")
+    if "flip_downtime_ms" in e:
+        return (f"flip={e['flip_downtime_ms']}ms,"
+                f"drained={e['drained_downtime_ms']}ms,"
+                f"flips={e['policy_flips']},"
+                f"shards={e['bank_sharding']}")
     if "reshard_downtime_ms" in e:
         return (f"downtime={e['reshard_downtime_ms']}ms,"
                 f"moved={e['tenants_moved']},"
@@ -1005,13 +1179,22 @@ def main() -> None:
                          "sweep: decode-only baseline plus exact hit "
                          "rates {0, 0.5, 0.9}, then append/replace the "
                          "serving_lm_* rows in BENCH_serving.json")
+    ap.add_argument("--autopilot", action="store_true",
+                    help="run ONLY the self-driving fleet smoke: bursty "
+                         "Zipf churn trace with the repro.fleet autopilot "
+                         "on under REPRO_FORCE_MESH — asserts at least one "
+                         "policy-initiated double-buffered reshard, "
+                         "bit-identity vs a pinned-spec run, and flip "
+                         "downtime strictly below the drained reshard — "
+                         "then append the serving_autopilot row to "
+                         "BENCH_serving.json")
     ap.add_argument("--telemetry-dir", default=None, metavar="DIR",
-                    help="with --chaos: keep the flight recorder's "
-                         "events.jsonl + metrics.prom in DIR so the CI "
-                         "telemetry-smoke job can validate them with "
+                    help="with --chaos or --autopilot: keep the flight "
+                         "recorder's events.jsonl + metrics.prom in DIR so "
+                         "the CI smoke jobs can validate them with "
                          "`python -m repro.obs.export`")
     args = ap.parse_args()
-    if args.reshard or args.chaos:
+    if args.reshard or args.chaos or args.autopilot:
         from repro.distributed import forcemesh
 
         forcemesh.apply_xla_flags()
@@ -1034,6 +1217,23 @@ def main() -> None:
         else:
             write_bench_json([entry], path)
         print("appended chaos recovery row to BENCH_serving.json")
+        return
+    if args.autopilot:
+        entry = autopilot_bench(smoke=True,
+                                telemetry_dir=args.telemetry_dir)
+        if entry is None:
+            raise SystemExit("--autopilot needs REPRO_FORCE_MESH=DxM")
+        path = "BENCH_serving.json"
+        if os.path.exists(path):
+            with open(path) as f:
+                payload = json.load(f)
+            payload["entries"] = [e for e in payload["entries"]
+                                  if "flip_downtime_ms" not in e] + [entry]
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=1)
+        else:
+            write_bench_json([entry], path)
+        print("appended serving_autopilot row to BENCH_serving.json")
         return
     if args.lm_cache:
         rows = lm_cache_bench(smoke=args.smoke)

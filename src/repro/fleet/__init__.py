@@ -1,0 +1,37 @@
+"""`repro.fleet` — the self-driving deployment layer.
+
+Everything above the PR-5 control plane that turns operator actions into
+inputs:
+
+  * `manifest` — `FleetManifest`: the tenant population as one hashable,
+    JSON-round-trippable value; `HybridService.apply_manifest` diffs it
+    like `reconfigure` diffs specs (add/evict/update/retune as minimal
+    hot transitions).
+  * `policy` — `decide(view) -> ServiceSpec`: a pure, deterministic
+    controller from a frozen `repro.obs` telemetry snapshot to the next
+    spec, plus the separate `should_compact` reclaim signal.
+  * `autopilot` — the impure driver: evaluate every K ticks with
+    hysteresis + cooldown, execute through `reconfigure` / the rolling
+    reshard, log every action as a reconstructible `policy_decision`
+    event.
+  * `reshard` — the double-buffered rolling reshard: build the re-packed
+    super-bank alongside the live one, flip between ticks (one
+    generation bump instead of a queue drain), bit-identical to the
+    drained path.
+"""
+from repro.fleet.autopilot import Autopilot
+from repro.fleet.manifest import (FleetManifest, ManifestDiff,
+                                  ManifestError, TenantSpec,
+                                  diff_manifests, load_bank, materialize,
+                                  save_bank, tau_in_units)
+from repro.fleet.policy import (PolicySpec, RegistryView, decide, explain,
+                                should_compact, view_of)
+from repro.fleet.reshard import PreparedReshard, flip, prepare
+
+__all__ = [
+    "Autopilot", "FleetManifest", "ManifestDiff", "ManifestError",
+    "TenantSpec", "diff_manifests", "load_bank", "materialize",
+    "save_bank", "tau_in_units", "PolicySpec", "RegistryView", "decide",
+    "explain", "should_compact", "view_of", "PreparedReshard", "flip",
+    "prepare",
+]

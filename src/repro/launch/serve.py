@@ -129,22 +129,39 @@ def run_acam(args) -> dict:
               f"({len(jax.devices())} devices)")
 
     protos = {}
-    for t in range(args.tenants):
-        bank, head, p = svc_lib.make_synthetic_tenant(
-            args.seed * 1000 + t, num_classes=args.classes,
-            num_features=n_features)
-        tid = f"tenant-{t}"
-        if tid not in svc.registry:  # a restored service adopted them all
-            svc.register_tenant(tid, bank, head=head)
-        protos[tid] = p
+    if args.manifest:
+        # declarative tenant population: ONE FleetManifest JSON file,
+        # diffed against the (empty) manifest in force — the same
+        # apply_manifest the autopilot uses for churn
+        from repro.fleet import FleetManifest
+
+        rep = svc.apply_manifest(FleetManifest.from_file(args.manifest))
+        print(f"manifest applied: +{len(rep.added)} added, "
+              f"-{len(rep.evicted)} evicted, {len(rep.updated)} updated, "
+              f"{len(rep.retuned)} retuned "
+              f"({len(svc.registry)} tenants live)")
+        for t in rep.manifest.tenants:
+            if t.seed is not None:  # checkpoint tenants have no protos
+                protos[t.tenant_id] = svc_lib.make_synthetic_tenant(
+                    t.seed, num_classes=t.num_classes, k=t.k,
+                    num_features=n_features)[2]
+    else:
+        for t in range(args.tenants):
+            bank, head, p = svc_lib.make_synthetic_tenant(
+                args.seed * 1000 + t, num_classes=args.classes,
+                num_features=n_features)
+            tid = f"tenant-{t}"
+            if tid not in svc.registry:  # a restored service adopted them
+                svc.register_tenant(tid, bank, head=head)
+            protos[tid] = p
 
     # mixed-tenant request stream (round-robin interleave, then shuffled —
     # every micro-batch holds several tenants)
     rng = np.random.RandomState(args.seed)
     reqs, truth = [], []
-    per_tenant = -(-args.requests // args.tenants)
-    for t in range(args.tenants):
-        tid = f"tenant-{t}"
+    tids = sorted(protos)
+    per_tenant = -(-args.requests // max(len(tids), 1))
+    for t, tid in enumerate(tids):
         feats, labels = svc_lib.sample_tenant_queries(
             args.seed + 7 * t, protos[tid], per_tenant, noise=args.noise)
         for i in range(per_tenant):
@@ -154,7 +171,34 @@ def run_acam(args) -> dict:
     reqs = [reqs[i] for i in order]
     truth = [truth[i] for i in order]
 
-    responses = svc.serve(reqs)
+    if args.autopilot:
+        # closed-loop serving: bursty submission, one observe_tick per
+        # step — the policy controller may reshard (double-buffered
+        # flip), swap backends, widen slots or compact mid-stream
+        from repro.fleet import Autopilot, PolicySpec
+
+        pilot = Autopilot(svc, policy=PolicySpec())
+        burst = spec.scheduler.slots
+        responses, i = [], 0
+        while i < len(reqs) or svc.scheduler.qsize:
+            for r in reqs[i:i + burst]:
+                svc.submit(r)
+            i += burst
+            responses.extend(svc.step())
+            pilot.observe_tick()
+            responses.extend(pilot.take_drained())
+        if pilot.actions:
+            acts = ", ".join(f"t{a['tick']}:{a['action']}"
+                             for a in pilot.actions)
+            print(f"autopilot: {len(pilot.actions)} actions ({acts}); "
+                  f"now bank_shards={svc.spec.mesh.bank_shards}, "
+                  f"slots={svc.spec.scheduler.slots}, "
+                  f"backend={svc.spec.engine.backend}")
+        else:
+            print("autopilot: no action (no threshold crossed)")
+        spec = svc.spec
+    else:
+        responses = svc.serve(reqs)
     m = svc.metrics()
     if args.snapshot_dir:
         from repro.checkpoint.checkpointer import Checkpointer
@@ -163,8 +207,9 @@ def run_acam(args) -> dict:
         print(f"service snapshot -> {args.snapshot_dir} step {step} "
               f"(restart with --restore)")
     acc = float(np.mean([r.pred == y for r, y in zip(responses, truth)]))
-    print(f"acam service: {m['completed']} requests over {args.tenants} "
-          f"tenants, {m['classify_dispatches']} fused dispatches "
+    print(f"acam service: {m['completed']} requests over "
+          f"{len(svc.registry)} tenants, "
+          f"{m['classify_dispatches']} fused dispatches "
           f"(occupancy {m['occupancy']:.2f}), accuracy {acc:.4f}")
     print(f"  escalation rate {m['escalation_rate']:.3f} "
           f"({m['escalated']} escalated, "
@@ -275,6 +320,15 @@ def main(argv=None) -> dict:
                          "ServiceSpec JSON file (other acam flags ignored)")
     ap.add_argument("--print-spec", action="store_true",
                     help="print the resolved ServiceSpec JSON before boot")
+    ap.add_argument("--manifest", default=None, metavar="FILE.json",
+                    help="populate tenants from a declarative FleetManifest "
+                         "JSON file (diffed + applied as live transitions) "
+                         "instead of the synthetic --tenants loop")
+    ap.add_argument("--autopilot", action="store_true",
+                    help="drive serving through the repro.fleet Autopilot: "
+                         "the telemetry policy may reshard (double-buffered "
+                         "flip), swap backends, widen slots or compact the "
+                         "registry mid-stream")
     ap.add_argument("--tenants", type=int, default=8)
     ap.add_argument("--slots", type=int, default=64)
     ap.add_argument("--classes", type=int, default=10,

@@ -37,6 +37,7 @@ from __future__ import annotations
 import contextlib
 import os
 import time
+from collections import deque
 
 from .energy import NJ, EnergyLedger
 from .export import (EVENT_SCHEMA, JsonlEventLog, read_events,
@@ -164,6 +165,10 @@ class FlightRecorder:
             "current straggler deadline (rolling-median based)")
         self._shed_state = False
         self.last_dispatch_ms = 0.0  # most recent fused-dispatch wall time
+        #: rolling per-tick batch fills (the fleet policy's saturation
+        #: signal — like the latency window, it describes the service NOW
+        #: and survives `reset()`)
+        self.fill_window: deque = deque(maxlen=64)
 
     # -- admission ---------------------------------------------------------
 
@@ -200,6 +205,7 @@ class FlightRecorder:
         self.slow_ticks.inc(int(slow))
         self.fill_min.set_min(fill)
         self.fill_max.set_max(fill)
+        self.fill_window.append(fill)
         return tick_id
 
     def record_expired(self, n: int) -> None:
@@ -290,6 +296,14 @@ class FlightRecorder:
             self.emit("shed_on" if shedding else "shed_off",
                       queue_depth=queue_depth,
                       p99_ms=round(self.latency_quantile_ms(0.99), 4))
+
+    def rolling_batch_fill(self) -> float:
+        """Mean batch fill over the rolling tick window — the fleet
+        policy's "sustained saturation" input (a single full tick never
+        reads as saturation; a full WINDOW does)."""
+        if not self.fill_window:
+            return 0.0
+        return sum(self.fill_window) / len(self.fill_window)
 
     def latency_quantile_ms(self, q: float) -> float:
         """THE latency quantile — `metrics()`, `health()`, and the

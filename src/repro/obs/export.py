@@ -46,6 +46,16 @@ EVENT_SCHEMA: dict[str, tuple[str, ...]] = {
     "restore": ("step", "resharded", "duration_ms"),
     "shed_on": ("queue_depth", "p99_ms"),
     "shed_off": ("queue_depth", "p99_ms"),
+    # fleet lifecycle (repro.fleet): the autopilot's black box. Every
+    # policy_decision carries the FULL frozen registry view it decided
+    # from plus the action taken, so the whole autopilot run is
+    # reconstructible from the log alone (replay `policy.decide` over
+    # the logged views and compare actions — tests/test_fleet.py does).
+    "policy_decision": ("tick", "action", "reason", "applied", "view"),
+    "manifest_apply": ("added", "evicted", "updated", "retuned",
+                       "duration_ms"),
+    "buffer_flip": ("bank_shards_from", "bank_shards_to", "tenants_moved",
+                    "flip_ms", "build_ms"),
 }
 
 _ENVELOPE = ("kind", "ts", "seq")

@@ -285,6 +285,16 @@ class ACAMService:
         self.registry.evict(tenant_id)
         del self._tenants[tenant_id]
 
+    def retune_tenant(self, tenant_id: str, *,
+                      margin_tau: float | None) -> None:
+        """Change ONLY a tenant's cascade threshold (spec tau_units; None
+        reverts to the cascade default) — no registry touch, no head
+        change, no retrace. The manifest path's tau-only transition."""
+        rt = self._tenants[tenant_id]
+        rt.raw_tau = margin_tau
+        rt.margin_tau = self._resolve_tau(margin_tau) if rt.has_head \
+            else None
+
     def _check_head(self, head):
         if head is None:
             return None
@@ -616,11 +626,22 @@ class ACAMService:
         }
 
     def health(self) -> dict:
-        """Liveness view for operators and the chaos harness: straggler
-        strikes (per-host gauges the `StragglerMonitor` feeds into the
-        registry), queue depth, and whether the next tick would run in
-        load-shed mode (via the same registry-backed `overloaded()`)."""
+        """Liveness view for operators, the chaos harness AND the fleet
+        controller: straggler strikes, queue depth, load-shed state — plus
+        the autoscaling policy's inputs as first-class fields (per-shard
+        registered rows vs capacity, the fused kernel's VMEM row budget
+        and the per-shard resident row count against it, rolling batch
+        fill, the exact rolling p99, and the ledger's energy split), so
+        `repro.fleet.policy.view_of` never reaches into private registry
+        state."""
+        from repro.kernels import layout
+        from repro.match.backends import MAX_FUSED_ROWS
+
         verdict = self.scheduler.last_verdict or {}
+        stats = self.registry.stats()
+        rows = self.registry.rows_per_shard
+        devices = len(self._devices) if self._devices is not None \
+            else len(jax.devices())
         return {
             "queue_depth": self.scheduler.qsize,
             "load_shedding": self.overloaded(),
@@ -629,6 +650,24 @@ class ACAMService:
                 int(labels["host"]): int(v)
                 for labels, v in self.obs.straggler_strikes.items()},
             "evict_verdict": list(verdict.get("evict", ())),
+            # -- fleet-controller inputs (repro.fleet.policy) --
+            "tenants": stats["tenants"],
+            "bank_shards": stats["bank_shards"],
+            "capacity_classes": stats["capacity_classes"],
+            "rows_per_shard": rows,
+            "shard_rows_used": self.registry.shard_rows_used(),
+            # the resident serve kernel holds k_max * padded(rows/shard)
+            # template rows in VMEM; past MAX_FUSED_ROWS it falls back to
+            # the class-chunked path — headroom is the policy's VMEM signal
+            "fused_rows_per_shard":
+                self.registry.k_max * layout.padded_classes(rows),
+            "vmem_budget_rows": MAX_FUSED_ROWS,
+            "rolling_batch_fill": round(self.obs.rolling_batch_fill(), 3),
+            "slots": self.scheduler.slots,
+            "devices": devices,
+            "p99_ms": round(self.obs.latency_quantile_ms(0.99), 4),
+            "energy_backend_j": self.obs.ledger.backend_j(),
+            "energy_frontend_j": self.obs.ledger.frontend_j(),
         }
 
     def reset_metrics(self) -> None:

@@ -85,6 +85,25 @@ class ReconfigureReport:
     tenants_moved: int = 0  # reshard: tenants whose class offset changed
 
 
+@dataclasses.dataclass
+class ManifestReport:
+    """What `apply_manifest` did: the tenant-set analogue of
+    `ReconfigureReport` (ids per transition kind, no drain involved —
+    every transition rides the hot register/update/evict paths)."""
+
+    manifest: "object"  # the FleetManifest now in force
+    added: tuple[str, ...]
+    evicted: tuple[str, ...]
+    updated: tuple[str, ...]
+    retuned: tuple[str, ...]
+    duration_s: float
+
+    @property
+    def empty(self) -> bool:
+        return not (self.added or self.evicted or self.updated
+                    or self.retuned)
+
+
 def install_mesh(mesh: MeshSpec, devices=None):
     """Build and install the (data = devices/bank_shards, model =
     bank_shards) serving mesh described by a `MeshSpec`. Returns the mesh.
@@ -208,6 +227,95 @@ class HybridService(ACAMService):
                                  drained=drained,
                                  downtime_s=downtime_s,
                                  tenants_moved=moved)
+
+    # ------------------------------------------------- fleet (repro.fleet)
+
+    def apply_manifest(self, manifest) -> ManifestReport:
+        """Diff a `FleetManifest` against the one in force and execute the
+        minimal tenant transitions — the tenant-set analogue of
+        `reconfigure`:
+
+            only in new        register (bank from seed/checkpoint + head)
+            only in old        evict
+            bank source moved  hot update in place (checkpoint-path or
+                               seed/shape change forces the bank reload)
+            epoch bumped       evict + re-register (forced fresh placement)
+            tau-only change    retune the threshold (registry untouched)
+
+        All transitions ride the hot paths, so bucketed shapes — and every
+        jitted caller's trace cache — stay untouched in the steady state;
+        a no-op manifest produces zero transitions and zero retraces.
+        Per-tenant taus are converted from the MANIFEST'S declared units
+        into the spec's `cascade.tau_units` before installation
+        (`fleet.manifest.tau_in_units`), so one manifest serves specs in
+        either unit system."""
+        from repro.fleet import manifest as manifest_lib
+
+        new = manifest.validate().normalized()
+        old = getattr(self, "_manifest", None) or \
+            manifest_lib.FleetManifest()
+        diff = manifest_lib.diff_manifests(old, new)
+        t0 = time.perf_counter()
+        n = self.registry.num_features
+        units = self.spec.cascade.tau_units
+        by_id = new.by_id()
+
+        def _tau(t):
+            return manifest_lib.tau_in_units(t.tau, t.tau_units, units, n)
+
+        for tid in diff.evict:
+            if tid in self.registry:
+                self.evict_tenant(tid)
+        for tid in diff.add:
+            t = by_id[tid]
+            bank, head = manifest_lib.materialize(t, n)
+            if tid in self.registry:  # adopting an imperatively-registered
+                self.update_tenant(tid, bank, head=head,  # tenant
+                                   margin_tau=_tau(t))
+            else:
+                self.register_tenant(tid, bank, head=head,
+                                     margin_tau=_tau(t))
+        for tid in diff.update:
+            t = by_id[tid]
+            bank, head = manifest_lib.materialize(t, n)
+            self.update_tenant(tid, bank, head=head, margin_tau=_tau(t))
+        for tid in diff.retune:
+            self.retune_tenant(tid, margin_tau=_tau(by_id[tid]))
+        self._manifest = new
+        duration_s = time.perf_counter() - t0
+        if not diff.empty:
+            self.obs.emit("manifest_apply", added=list(diff.add),
+                          evicted=list(diff.evict),
+                          updated=list(diff.update),
+                          retuned=list(diff.retune),
+                          duration_ms=round(duration_s * 1e3, 3))
+        return ManifestReport(manifest=new, added=diff.add,
+                              evicted=diff.evict, updated=diff.update,
+                              retuned=diff.retune, duration_s=duration_s)
+
+    def rolling_reshard(self, new_spec: ServiceSpec, *,
+                        prepared=None) -> ReconfigureReport:
+        """The double-buffered reshard (`repro.fleet.reshard`): build the
+        re-packed super-bank alongside the live one, then flip between
+        ticks — NO drain, downtime is the flip + mesh install alone.
+        Bit-identical preds/margins/escalations to the drained
+        `reconfigure` path. Pass ``prepared`` (from `fleet.reshard.
+        prepare`) to flip a buffer built earlier, overlapped with
+        serving; without it this prepares and flips back to back."""
+        from repro.fleet import reshard as reshard_lib
+
+        if prepared is None:
+            prepared = reshard_lib.prepare(self, new_spec)
+        return reshard_lib.flip(self, prepared)
+
+    def compact_registry(self) -> int:
+        """Reclaim eviction debt: re-pack the super-bank into its smallest
+        shard-aligned capacity (`TemplateBankRegistry.compact`). The
+        fleet policy triggers this when occupancy drops below its
+        threshold (`fleet.policy.should_compact`); safe live — queued
+        requests resolve placements at tick time. Returns class rows
+        freed."""
+        return self.registry.compact()
 
     # ------------------------------------------------------- durability
 

@@ -82,6 +82,24 @@ class TenantEntry:
         return self.offset, self.offset + self.num_classes
 
 
+@dataclasses.dataclass
+class PreparedBank:
+    """A shadow super-bank built alongside the live one (`prepare_reshard`):
+    fresh host arrays re-packed to new shard boundaries plus the tenant
+    placements that go with them. `adopt_prepared` flips the registry to
+    this buffer between scheduler ticks; `source_generation` pins the
+    registry state it was built from (any mutation in between makes the
+    buffer stale and the flip refuses)."""
+
+    bank_shards: int
+    capacity: int
+    source_generation: int
+    arrays: dict  # _templates/_lower/_upper/_valid replacement arrays
+    bucket_used: "np.ndarray"
+    placements: list  # [(tenant_id, new_offset)]
+    moved: int  # tenants whose offset changed
+
+
 class TemplateBankRegistry:
     """Registry of per-tenant `TemplateBank`s stacked into one super-bank."""
 
@@ -169,6 +187,17 @@ class TemplateBankRegistry:
             "bank_shards": self.bank_shards,
             "rows_per_shard": self.rows_per_shard,
         }
+
+    def shard_rows_used(self) -> list[int]:
+        """Allocated class rows per bank shard (bucket granularity) — the
+        autoscaling policy's primary signal: when the fullest shard
+        approaches `rows_per_shard`, the next registration may force a
+        capacity grow (device-shape change + retrace), so the policy
+        escalates `bank_shards` *before* that happens."""
+        per_shard = self.rows_per_shard // self.class_bucket
+        return [int(self._bucket_used[s * per_shard:(s + 1) * per_shard]
+                    .sum()) * self.class_bucket
+                for s in range(self.bank_shards)]
 
     # -- allocation ---------------------------------------------------------
 
@@ -337,6 +366,72 @@ class TemplateBankRegistry:
             out.append((e, placed))
         return out
 
+    def _build_shadow(self, cap: int, bank_shards: int) -> "PreparedBank":
+        """Copy every tenant's bucket run into FRESH arrays of ``cap`` rows
+        cut into ``bank_shards`` shards (first-fit via `_pack`, growing
+        ``cap`` by doubling until everyone fits). Pure read of the live
+        bank: nothing this registry serves changes until `adopt_prepared`."""
+        order = sorted(self._tenants.values(), key=lambda e: e.offset)
+        while (placement := self._pack(order, cap, bank_shards)) is None:
+            cap *= 2  # doubling keeps future growth boundary-compatible
+        arrays = {name: np.zeros((cap,) + getattr(self, name).shape[1:],
+                                 getattr(self, name).dtype)
+                  for name in ("_templates", "_lower", "_upper", "_valid")}
+        bucket_used = np.zeros(cap // self.class_bucket, bool)
+        moved = 0
+        placements = []
+        for entry, offset in placement:
+            lo, hi = entry.offset, entry.offset + entry.c_bucket
+            for name, arr in arrays.items():
+                arr[offset:offset + entry.c_bucket] = \
+                    getattr(self, name)[lo:hi]
+            start = offset // self.class_bucket
+            bucket_used[start:start + entry.c_bucket
+                        // self.class_bucket] = True
+            moved += offset != entry.offset
+            placements.append((entry.tenant_id, offset))
+        return PreparedBank(bank_shards=bank_shards, capacity=cap,
+                            source_generation=self.generation,
+                            arrays=arrays, bucket_used=bucket_used,
+                            placements=placements, moved=moved)
+
+    def prepare_reshard(self, bank_shards: int) -> "PreparedBank":
+        """Build the re-packed super-bank ALONGSIDE the live one (the
+        double-buffered reshard's prepare half — `repro.fleet.reshard`).
+        The live bank keeps serving while this copies; `adopt_prepared`
+        flips to the shadow between ticks. The prepared buffer records the
+        source generation, so a registry mutation after prepare (register/
+        update/evict) makes it stale and adopt refuses it."""
+        if bank_shards < 1:
+            raise ValueError("bank_shards must be >= 1")
+        align = bank_shards * self.class_bucket
+        cap = -(-self._c_cap // align) * align
+        return self._build_shadow(cap, bank_shards)
+
+    def adopt_prepared(self, prepared: "PreparedBank") -> int:
+        """Flip to a shadow bank built by `prepare_reshard`: swap the host
+        arrays + allocation map, move tenant offsets, bump the generation
+        (device caches drop; the next `device_bank()` uploads the new
+        buffer and the old one is garbage). O(tenants) pointer work — the
+        O(rows) copy already happened in prepare, while serving continued.
+        Raises `RegistryError` when the registry mutated since prepare."""
+        if prepared.source_generation != self.generation:
+            raise RegistryError(
+                f"prepared bank is stale: built at generation "
+                f"{prepared.source_generation}, registry is now at "
+                f"{self.generation}; re-prepare")
+        for name, arr in prepared.arrays.items():
+            setattr(self, name, arr)
+        self._bucket_used = prepared.bucket_used
+        for tenant_id, offset in prepared.placements:
+            entry = self._tenants[tenant_id]
+            self._tenants[tenant_id] = dataclasses.replace(
+                entry, offset=offset, generation=self.generation + 1)
+        self._c_cap = prepared.capacity
+        self.bank_shards = prepared.bank_shards
+        self._bump()
+        return prepared.moved
+
     def reshard(self, bank_shards: int) -> int:
         """Re-pack every tenant's bucket run to new shard boundaries
         WITHOUT re-registering anyone: tenant ids, slots, thresholds, head
@@ -348,41 +443,39 @@ class TemplateBankRegistry:
 
         The caller (the control plane) drains the scheduler first; queued
         work is safe regardless because placements are resolved at tick
-        time (`lookup`), never at submit time.
+        time (`lookup`), never at submit time. (`prepare_reshard` +
+        `adopt_prepared` is the no-drain double-buffered variant.)
         """
-        if bank_shards < 1:
-            raise ValueError("bank_shards must be >= 1")
         if bank_shards == self.bank_shards:
             return 0
-        align = bank_shards * self.class_bucket
-        cap = -(-self._c_cap // align) * align
-        order = sorted(self._tenants.values(), key=lambda e: e.offset)
-        while (placement := self._pack(order, cap, bank_shards)) is None:
-            cap *= 2  # doubling keeps future growth boundary-compatible
-        src = {name: getattr(self, name)
-               for name in ("_templates", "_lower", "_upper")}
-        for name, arr in src.items():
-            setattr(self, name, np.zeros((cap,) + arr.shape[1:], arr.dtype))
-        valid_src, self._valid = self._valid, np.zeros((cap, self.k_max),
-                                                       bool)
-        self._bucket_used = np.zeros(cap // self.class_bucket, bool)
-        moved = 0
-        for entry, offset in placement:
-            lo, hi = entry.offset, entry.offset + entry.c_bucket
-            for name, arr in src.items():
-                getattr(self, name)[offset:offset + entry.c_bucket] = \
-                    arr[lo:hi]
-            self._valid[offset:offset + entry.c_bucket] = valid_src[lo:hi]
-            start = offset // self.class_bucket
-            self._bucket_used[start:start + entry.c_bucket
-                              // self.class_bucket] = True
-            moved += offset != entry.offset
-            self._tenants[entry.tenant_id] = dataclasses.replace(
-                entry, offset=offset, generation=self.generation + 1)
-        self._c_cap = cap
-        self.bank_shards = bank_shards
-        self._bump()
-        return moved
+        return self.adopt_prepared(self.prepare_reshard(bank_shards))
+
+    def compact(self) -> int:
+        """Shrink capacity back down after evictions: re-pack every tenant
+        into the SMALLEST shard-aligned capacity that holds them.
+
+        `_grow_classes` only ever doubles and `evict` only frees buckets,
+        so a registry that once held many tenants serves a mostly-empty
+        super-bank forever — every `device_bank()` upload, fused-kernel
+        row budget and shard copy pays for rows nobody owns. This is the
+        reclaim hook the fleet policy triggers when occupancy drops below
+        its threshold (`repro.fleet.policy.should_compact`).
+
+        Placement-invariant per tenant: `bank_of(t)` returns the same
+        bytes before and after (only offsets move). Changes the device
+        array shapes (the one retrace event, same as a capacity grow).
+        Returns the number of class rows freed (0 = already minimal)."""
+        align = self.bank_shards * self.class_bucket
+        used = int(self._bucket_used.sum()) * self.class_bucket
+        cap = max(align, -(-used // align) * align)
+        if cap >= self._c_cap:
+            return 0
+        prepared = self._build_shadow(cap, self.bank_shards)
+        if prepared.capacity >= self._c_cap:
+            return 0  # fragmentation kept the pack from shrinking
+        freed = self._c_cap - prepared.capacity
+        self.adopt_prepared(prepared)
+        return freed
 
     def evict(self, tenant_id: str) -> None:
         """Drop a tenant: invalidate its rows, free its bucket range + slot."""

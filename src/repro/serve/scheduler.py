@@ -247,7 +247,15 @@ class MicroBatchScheduler:
         return out
 
     def tick(self) -> list[SlotResult]:
-        """Serve one micro-batch; returns [] when the queue is empty."""
+        """Serve one micro-batch; returns [] when the queue is empty.
+
+        Contract the double-buffered reshard (`repro.fleet.reshard`)
+        leans on: every tick re-resolves placements via
+        `registry.lookup` and re-reads `device_bank()` /
+        `thresholds_table()` (generation-cached), and queued `WorkItem`s
+        hold only tenant ids — so swapping the registry's arrays +
+        offsets BETWEEN two ticks is invisible to queued work, and a
+        bank flip needs no drain."""
         if not self._queue:
             return []
         t0 = time.perf_counter()
